@@ -1,0 +1,103 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step, from the
+compiled HLO (per-device numbers; see launch/hlo_analysis.py):
+
+  compute     = flops_per_device / PEAK_FLOPS
+  memory      = hbm_bytes_per_device / HBM_BW
+  collective  = collective_bytes_per_device / LINK_BW
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The step's lower-bound time is max(terms); the dominant term is the
+bottleneck; roofline fraction = compute / max(terms) (how much of the
+machine's FLOP roof the step can possibly use).  MODEL_FLOPS / HLO_FLOPS
+shows how much of the compiled compute is "useful" (remat/dispatch waste).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+__all__ = ["load_records", "roofline_terms", "roofline_table", "main"]
+
+
+def load_records(art_dir: str = "artifacts/dryrun", mesh: str = "singlepod") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(f"{art_dir}/*__{mesh}.json")):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def roofline_terms(rec: dict) -> dict:
+    comp = rec["flops_per_device"] / PEAK_FLOPS
+    mem = rec["hbm_bytes_per_device"] / HBM_BW
+    coll = rec["collective_total_per_device"] / LINK_BW
+    terms = {"compute_s": comp, "memory_s": mem, "collective_s": coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(comp, mem, coll)
+    model = rec.get("model_flops_global", 0.0)
+    hlo_global = rec["flops_per_device"] * rec["n_devices"]
+    out = {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "roofline_fraction": comp / bound if bound > 0 else 0.0,
+        "model_over_hlo_flops": (model / hlo_global) if hlo_global else 0.0,
+        "step_lower_bound_s": bound,
+    }
+    return out
+
+
+_ADVICE = {
+    "compute": "compute-bound: raise MXU utilization (tile alignment, fuse "
+               "small ops, drop redundant recompute) or accept — this is the roof",
+    "memory": "memory-bound: cut HBM traffic (fuse producers into consumers, "
+              "avoid materialized masks/intermediates, recompute-in-VMEM, "
+              "smaller activation dtypes)",
+    "collective": "collective-bound: reshard to shrink cross-device bytes "
+                  "(different TP axis, overlap collectives with compute, "
+                  "compress payloads)",
+}
+
+
+def roofline_table(recs: list[dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | "
+        "dominant | roofline frac | model/HLO flops | bound (s) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        t = roofline_terms(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} | {t['collective_s']:.2e} "
+            f"| {t['dominant']} | {t['roofline_fraction']:.3f} "
+            f"| {t['model_over_hlo_flops']:.3f} | {t['step_lower_bound_s']:.2e} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    recs = load_records()
+    print(roofline_table(recs))
+    print()
+    # the three §Perf candidates
+    scored = [(r, roofline_terms(r)) for r in recs]
+    worst = min(scored, key=lambda rt: rt[1]["roofline_fraction"])
+    coll_bound = max(scored, key=lambda rt: rt[1]["collective_s"])
+    print(f"worst roofline fraction : {worst[0]['arch']} x {worst[0]['shape']} "
+          f"({worst[1]['roofline_fraction']:.3f}) -> {_ADVICE[worst[1]['dominant']]}")
+    print(f"most collective-bound   : {coll_bound[0]['arch']} x {coll_bound[0]['shape']} "
+          f"({coll_bound[1]['collective_s']:.2e}s) -> {_ADVICE['collective']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark harness: one section per paper table + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (per harness contract) and a
+human-readable table; roofline sections read the dry-run artifacts.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.paper_tables import (  # noqa: E402
+    bench_algorithms,
+    bench_duplicates,
+    bench_vectorized,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    n_queries = 10 if args.quick else 30
+
+    print("name,us_per_call,derived")
+
+    # ---- paper Experiment 1/2 analogue: Fig.5/6 + postings tables ---------
+    rows = bench_algorithms(n_queries=n_queries)
+    se1_ms = next(r["avg_ms"] for r in rows if r["algorithm"] == "SE1")
+    for r in rows:
+        speedup = se1_ms / r["avg_ms"] if r["avg_ms"] else 0.0
+        print(f"paper_fig5_{r['algorithm']},{r['avg_ms']*1000:.1f},"
+              f"speedup_vs_SE1={speedup:.2f}")
+        print(f"paper_postings_{r['algorithm']},{r['avg_postings']:.0f},"
+              f"avg_kb={r['avg_kb']:.1f};intermediate={r['avg_intermediate']:.0f};"
+              f"results={r['avg_results']:.1f}")
+
+    # ---- §12 duplicate-lemma case ------------------------------------------
+    dup = bench_duplicates()
+    for name, d in dup.items():
+        print(f"paper_dup_{name},{d['ms']*1000:.1f},"
+              f"postings={d['postings']};intermediate={d['intermediate']};"
+              f"results={d['results']}")
+
+    # ---- vectorized / Pallas engines ---------------------------------------
+    for r in bench_vectorized():
+        print(f"engine_{r['engine']},{r['avg_ms']*1000:.1f},results={r['results']}")
+
+    # ---- roofline (from dry-run artifacts, if present) ----------------------
+    try:
+        from benchmarks.roofline import load_records, roofline_terms
+
+        recs = load_records()
+        for r in recs:
+            t = roofline_terms(r)
+            print(f"roofline_{r['arch']}__{r['shape']},"
+                  f"{t['step_lower_bound_s']*1e6:.0f},"
+                  f"dominant={t['dominant']};frac={t['roofline_fraction']:.3f};"
+                  f"model_over_hlo={t['model_over_hlo_flops']:.3f}")
+    except Exception as e:  # artifacts absent on a fresh checkout
+        print(f"roofline_skipped,0,reason={type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

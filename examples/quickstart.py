@@ -1,0 +1,33 @@
+"""Quickstart: build a corpus, index it, run proximity queries (SE2.4).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.index import build_indexes, synthesize_corpus
+from repro.search.engine import SearchEngine
+
+# 1) corpus: Zipf-distributed synthetic text + the paper's example phrases
+store = synthesize_corpus(n_docs=120, doc_len=200, seed=42)
+print(f"corpus: {len(store)} documents, {store.total_positions():,} positions")
+
+# 2) indexes (§3): ordinary + NSW, (w,v) pairs, (f,s,t) stop-lemma triples
+index = build_indexes(store, sw_count=80, fu_count=250, max_distance=5)
+sizes = index.size_bytes()
+print(f"index: {len(index.triple):,} three-component keys, "
+      f"{sizes['total'] / 1e6:.1f} MB total "
+      f"(triple={sizes['triple'] / 1e6:.1f} MB)")
+
+# 3) search with the paper's Combiner algorithm (SE2.4)
+engine = SearchEngine(index, algorithm="se2.4")
+for query in ["who are you who", "to be or not to be", "how to find the mean"]:
+    resp = engine.search(query, top_k=3)
+    print(f"\nquery {query!r}: {resp.stats.postings_read} postings read, "
+          f"{resp.stats.results} fragments, "
+          f"{resp.stats.elapsed_sec * 1000:.1f} ms")
+    for doc in resp.docs:
+        frags = ", ".join(f"[{f.start}..{f.end}]" for f in doc.fragments[:3])
+        words = store.documents[doc.doc_id].text.split()
+        f0 = doc.fragments[0]
+        snippet = " ".join(words[f0.start : f0.end + 1])
+        print(f"  doc {doc.doc_id:4d}  score={doc.score:.4f}  {frags}")
+        print(f"       ...{snippet}...")

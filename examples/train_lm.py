@@ -1,0 +1,24 @@
+"""Train a reduced LM config end to end on CPU with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch tinyllama-1.1b] [--steps 30]
+
+(The full-scale configs are exercised by the dry-run / real TPU slices via
+``python -m repro.launch.train --full-scale``.)
+"""
+
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="tinyllama-1.1b")
+ap.add_argument("--steps", type=int, default=30)
+args = ap.parse_args()
+
+cmd = [
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", args.arch, "--steps", str(args.steps),
+    "--ckpt-dir", "/tmp/repro_ckpt", "--ckpt-every", "10",
+]
+print("+", " ".join(cmd))
+raise SystemExit(subprocess.call(cmd))

@@ -1,0 +1,3 @@
+from .checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

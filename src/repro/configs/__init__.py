@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Ten assigned architectures + the paper's own ``paper_search`` system.
+Every arch exposes a full-scale spec (dry-run only — ShapeDtypeStructs,
+no allocation) and a reduced smoke spec (CPU-runnable).
+"""
+
+from __future__ import annotations
+
+from .common import ArchSpec, ShapeCell
+from . import (
+    stablelm_3b,
+    mistral_large_123b,
+    tinyllama_1_1b,
+    llama4_maverick,
+    olmoe_1b_7b,
+    gat_cora,
+    autoint,
+    mind,
+    dcn_v2,
+    fm,
+    paper_search,
+)
+
+_MODULES = {
+    "stablelm-3b": stablelm_3b,
+    "mistral-large-123b": mistral_large_123b,
+    "tinyllama-1.1b": tinyllama_1_1b,
+    "llama4-maverick-400b-a17b": llama4_maverick,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "gat-cora": gat_cora,
+    "autoint": autoint,
+    "mind": mind,
+    "dcn-v2": dcn_v2,
+    "fm": fm,
+    "paper_search": paper_search,
+}
+
+ARCH_IDS = tuple(_MODULES)
+ASSIGNED_ARCH_IDS = tuple(a for a in ARCH_IDS if a != "paper_search")
+
+
+def get_spec(arch_id: str) -> ArchSpec:
+    return _MODULES[arch_id].spec()
+
+
+def get_reduced_spec(arch_id: str) -> ArchSpec:
+    return _MODULES[arch_id].reduced_spec()
+
+
+__all__ = ["ArchSpec", "ShapeCell", "ARCH_IDS", "ASSIGNED_ARCH_IDS", "get_spec", "get_reduced_spec"]

@@ -1,0 +1,199 @@
+"""Multi-component key selection (paper §6) and subquery expansion (§5).
+
+A *subquery* is a list of lemmas (one lemma per query position).  Key
+selection greedily covers the subquery's lemmas with three-component keys:
+
+* first component  — the most frequently occurring (min FL-number) unused lemma;
+* second component — an unused lemma occupying a query index different from the
+  first's; among acceptable candidates, the *least* frequently occurring
+  (max FL-number); if none, the "used" mark is ignored and the component is
+  marked ``*`` (duplicate);
+* third component  — same rule with the first two indexes excluded.
+
+``*``-marked components do not contribute ``Set`` calls during the search
+(paper §10.4); they exist only so the key has full arity.
+
+Keys are stored canonically with components ordered by FL-number
+(``f <= s <= t``, paper §3); star marks travel with their component.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from .lemma import FLList, Lemmatizer
+
+__all__ = ["SelectedKey", "select_keys", "expand_subqueries", "Subquery"]
+
+
+@dataclass(frozen=True)
+class SelectedKey:
+    """A canonical multi-component key plus per-component duplicate marks.
+
+    ``components`` are FL-sorted (f <= s <= t).  ``starred[i]`` is True when
+    the i-th canonical component was a ``*`` duplicate in §6 selection.
+    ``arity`` is 3 for (f,s,t) keys; shorter subqueries degrade to 2- or
+    1-component keys (paper §14: "the new algorithm can also be used with any
+    multi-component indexes and one-component indexes").
+    """
+
+    components: tuple[str, ...]
+    starred: tuple[bool, ...]
+
+    @property
+    def arity(self) -> int:
+        return len(self.components)
+
+    def active_components(self) -> list[tuple[int, str]]:
+        """(slot, lemma) pairs that DO produce Set() calls (unstarred)."""
+        return [(i, c) for i, (c, s) in enumerate(zip(self.components, self.starred)) if not s]
+
+
+@dataclass(frozen=True)
+class Subquery:
+    """A fully lemma-resolved query: one lemma per position."""
+
+    lemmas: tuple[str, ...]
+
+    def __len__(self) -> int:
+        return len(self.lemmas)
+
+    def unique_lemmas(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for l in self.lemmas:
+            seen.setdefault(l)
+        return list(seen)
+
+    def multiplicity(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for l in self.lemmas:
+            out[l] = out.get(l, 0) + 1
+        return out
+
+
+def expand_subqueries(query: str, lemmatizer: Lemmatizer, limit: int = 16) -> list[Subquery]:
+    """§5: expand a word query into subqueries over the lemma alternatives.
+
+    "who are you who" -> [who][are][you][who], [who][be][you][who].
+    ``limit`` caps the cartesian blow-up for pathological inputs.
+    """
+    per_position = lemmatizer.lemmatize_text(query)
+    if not per_position:
+        return []
+    combos = itertools.product(*per_position)
+    return [Subquery(tuple(c)) for c in itertools.islice(combos, limit)]
+
+
+# ---------------------------------------------------------------------------
+# §6 key selection
+# ---------------------------------------------------------------------------
+
+
+def _positions_of(lemmas: Sequence[str]) -> dict[str, list[int]]:
+    pos: dict[str, list[int]] = {}
+    for i, l in enumerate(lemmas):
+        pos.setdefault(l, []).append(i)
+    return pos
+
+
+def _pick(
+    candidates: list[str],
+    fl: FLList,
+    *,
+    most_frequent: bool,
+) -> str | None:
+    if not candidates:
+        return None
+    key = lambda l: (fl.number(l), l)
+    return min(candidates, key=key) if most_frequent else max(candidates, key=key)
+
+
+def select_keys(subquery: Subquery, fl: FLList, arity: int = 3) -> list[SelectedKey]:
+    """Greedy §6 selection.  Returns canonical keys covering every lemma.
+
+    Fidelity refinement (DESIGN.md §7): a fallback component is ``*``-starred
+    only when the lemma already has as many UNSTARRED slots as its query
+    multiplicity.  Verbatim §6 stars every fallback, which silently loses the
+    second occurrence of a duplicated lemma that never anchors a key (e.g.
+    the query [a a b b] selects the single key (a, b, b*) and can then never
+    satisfy b's multiplicity).  All §6 paper examples are unaffected.
+    """
+    lemmas = list(subquery.lemmas)
+    if not lemmas:
+        return []
+    arity = min(arity, max(1, len(lemmas)))
+    positions = _positions_of(lemmas)
+    mult = subquery.multiplicity()
+    unstarred_slots: dict[str, int] = {l: 0 for l in positions}
+    used: set[str] = set()
+    keys: list[SelectedKey] = []
+
+    def free_index(lemma: str, taken: set[int]) -> int | None:
+        for i in positions[lemma]:
+            if i not in taken:
+                return i
+        return None
+
+    while True:
+        unused = [l for l in positions if l not in used]
+        if not unused:
+            break
+        # --- first component: most frequent unused lemma -------------------
+        first = _pick(unused, fl, most_frequent=True)
+        assert first is not None
+        comps: list[str] = [first]
+        stars: list[bool] = [False]
+        used.add(first)
+        unstarred_slots[first] += 1
+        taken_idx: set[int] = {positions[first][0]}
+
+        # --- remaining components ------------------------------------------
+        for _slot in range(1, arity):
+            unused_ok = [
+                l for l in positions
+                if l not in used and free_index(l, taken_idx) is not None
+            ]
+            if unused_ok:
+                pick = _pick(unused_ok, fl, most_frequent=False)
+                assert pick is not None
+                comps.append(pick)
+                stars.append(False)
+                used.add(pick)
+                unstarred_slots[pick] += 1
+                idx = free_index(pick, taken_idx)
+                assert idx is not None
+                taken_idx.add(idx)
+                continue
+            # fallback: ignore the "used" mark -> * duplicate, UNLESS the
+            # lemma still needs unstarred slots to satisfy its multiplicity
+            any_ok = [l for l in positions if free_index(l, taken_idx) is not None]
+            if any_ok:
+                pick = _pick(any_ok, fl, most_frequent=False)
+                assert pick is not None
+                star = unstarred_slots[pick] >= mult[pick]
+                comps.append(pick)
+                stars.append(star)
+                if not star:
+                    unstarred_slots[pick] += 1
+                idx = free_index(pick, taken_idx)
+                assert idx is not None
+                taken_idx.add(idx)
+                continue
+            # final fallback (subquery shorter than arity w/ duplicates):
+            # relax the index-distinctness requirement as well.
+            pick = _pick(list(positions), fl, most_frequent=False)
+            assert pick is not None
+            comps.append(pick)
+            stars.append(True)
+
+        # canonicalize: sort components by FL-number, stars travel along.
+        order = sorted(range(len(comps)), key=lambda i: (fl.number(comps[i]), comps[i], stars[i]))
+        keys.append(
+            SelectedKey(
+                components=tuple(comps[i] for i in order),
+                starred=tuple(stars[i] for i in order),
+            )
+        )
+    return keys

@@ -1,0 +1,115 @@
+"""Vectorized (TPU-native) reformulation of the Combiner's Step 3.
+
+The paper's Position-table machinery is inherently sequential (queues, Bit
+Scan Forward).  On a TPU we exploit the same two invariants the paper does —
+
+  (1) every reportable fragment has span ``<= 2 * MaxDistance`` (the Step-2
+      gate), and
+  (2) occurrences can be represented as *occupancy* over document positions
+      (the Position table's 64-bit masks),
+
+— but evaluate **all candidate windows in parallel** instead of walking a
+queue:
+
+  For local lemma ``l`` let ``occ[l, p] ∈ {0,1}`` be the occupancy and
+  ``C[l, p] = Σ_{q<=p} occ[l, q]`` its prefix count.  The window ``[q, e]``
+  covers the subquery iff  ``C[l,e] - C[l,q] + occ[l,q] >= mult[l]`` for all
+  ``l``.  A fragment is emitted at every event position ``e`` where some
+  ``q >= e - 2D`` covers; its start is the *largest* covering ``q`` — exactly
+  the §10.2 shrink result.
+
+This file is the pure-jnp reference ("ref" semantics); the Pallas kernel in
+``kernels/proximity.py`` computes the identical function with explicit VMEM
+blocking, and ``kernels/ref.py`` re-exports this for the allclose tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "window_cover",
+    "window_cover_batch",
+    "events_to_occupancy",
+    "results_from_cover",
+]
+
+
+def window_cover(
+    occ: jax.Array,  # [L, N] int32 0/1 occupancy per local lemma
+    mult: jax.Array,  # [L] int32 required multiplicity (0 = unused slot)
+    window: int,  # 2*MaxDistance + 1 candidate window width
+) -> tuple[jax.Array, jax.Array]:
+    """Per-position emission mask and fragment starts for one document.
+
+    Returns ``(emit, start)`` with shapes ``([N], [N])``: ``emit[e]`` is True
+    where a minimal fragment ends at ``e``; ``start[e]`` is its start
+    position (undefined where ``emit`` is False).
+    """
+    # narrow compute dtype (§Perf-3): occupancy and prefix counts fit in u8
+    # for window lengths <= 255, quartering the HBM traffic of the cover loop
+    if occ.dtype in (jnp.uint8, jnp.uint16) and occ.shape[-1] <= jnp.iinfo(occ.dtype).max:
+        cdt = occ.dtype
+    else:
+        cdt = jnp.dtype(jnp.int32)
+    occ = occ.astype(cdt)
+    mult = mult.astype(cdt)
+    n = occ.shape[-1]
+    active = (mult > 0)[:, None]  # [L, 1]
+    c = jnp.cumsum(occ, axis=-1, dtype=cdt)  # C[l, p]
+    is_event = jnp.any((occ > 0) & active, axis=0)  # [N]
+
+    def shifted(x: jax.Array, o: int) -> jax.Array:
+        if o == 0:
+            return x
+        pad = jnp.zeros(x.shape[:-1] + (o,), x.dtype)
+        return jnp.concatenate([pad, x[..., : n - o]], axis=-1)
+
+    found = jnp.zeros((n,), jnp.bool_)
+    o_star = jnp.zeros((n,), jnp.int32)
+    for o in range(window):
+        cq = shifted(c, o)
+        oq = shifted(occ, o)
+        cnt = c - cq + oq  # occurrences in [e-o, e]
+        cover = jnp.all((cnt >= mult[:, None]) | ~active, axis=0)
+        # a window must start inside the document
+        cover = cover & (jnp.arange(n) >= o)
+        o_star = jnp.where(cover & ~found, o, o_star)
+        found = found | cover
+    emit = found & is_event
+    start = jnp.arange(n, dtype=jnp.int32) - o_star
+    return emit, start
+
+
+def window_cover_batch(
+    occ: jax.Array,  # [B, L, N]
+    mult: jax.Array,  # [B, L]
+    window: int,
+) -> tuple[jax.Array, jax.Array]:
+    """vmap of :func:`window_cover` over a padded document batch."""
+    return jax.vmap(lambda o, m: window_cover(o, m, window))(occ, mult)
+
+
+def events_to_occupancy(
+    events_pos: np.ndarray,  # [E] positions (pad = -1)
+    events_lem: np.ndarray,  # [E] local lemma ids
+    n_lemmas: int,
+    doc_len: int,
+) -> np.ndarray:
+    """Host-side scatter of (pos, lemma) events into dense occupancy."""
+    occ = np.zeros((n_lemmas, doc_len), dtype=np.int32)
+    ok = events_pos >= 0
+    occ[events_lem[ok], events_pos[ok]] = 1
+    return occ
+
+
+def results_from_cover(
+    doc_id: int, emit: np.ndarray, start: np.ndarray
+) -> list[tuple[int, int, int]]:
+    """(doc, start, end) triples from the emission mask."""
+    ends = np.nonzero(np.asarray(emit))[0]
+    starts = np.asarray(start)[ends]
+    return [(doc_id, int(s), int(e)) for s, e in zip(starts, ends)]

@@ -1,0 +1,11 @@
+from .pipeline import LMTokenPipeline, RecsysBatchPipeline, PipelineState
+from .sampler import NeighborSampler, CSRGraph, random_graph
+
+__all__ = [
+    "LMTokenPipeline",
+    "RecsysBatchPipeline",
+    "PipelineState",
+    "NeighborSampler",
+    "CSRGraph",
+    "random_graph",
+]

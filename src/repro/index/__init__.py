@@ -1,0 +1,11 @@
+from .corpus import Document, DocumentStore, synthesize_corpus, PAPER_EXAMPLE_DOCS
+from .builder import IndexSet, build_indexes
+
+__all__ = [
+    "Document",
+    "DocumentStore",
+    "synthesize_corpus",
+    "PAPER_EXAMPLE_DOCS",
+    "IndexSet",
+    "build_indexes",
+]

@@ -1,0 +1,23 @@
+from .ops import (
+    PAD,
+    block_offsets,
+    embedding_bag_ref,
+    fragment_scores_ref,
+    intersect_ref,
+    intersect_sorted,
+    proximity_search_scores,
+    proximity_window,
+    proximity_window_ref,
+)
+
+__all__ = [
+    "PAD",
+    "block_offsets",
+    "embedding_bag_ref",
+    "fragment_scores_ref",
+    "intersect_ref",
+    "intersect_sorted",
+    "proximity_search_scores",
+    "proximity_window",
+    "proximity_window_ref",
+]

@@ -1,0 +1,50 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret=True`` everywhere in this repo (CPU container); on a real TPU
+deployment the same calls run compiled — the flag is plumbed through configs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .intersect import PAD, block_offsets, intersect_sorted
+from .proximity import proximity_window
+from .ref import (
+    embedding_bag_ref,
+    fragment_scores_ref,
+    intersect_ref,
+    proximity_window_ref,
+)
+
+__all__ = [
+    "proximity_window",
+    "proximity_window_ref",
+    "intersect_sorted",
+    "intersect_ref",
+    "block_offsets",
+    "embedding_bag_ref",
+    "fragment_scores_ref",
+    "proximity_search_scores",
+    "PAD",
+]
+
+
+@functools.partial(jax.jit, static_argnames=("max_distance", "use_kernel", "interpret"))
+def proximity_search_scores(
+    occ: jax.Array,  # [B, L, N] occupancy per candidate window
+    mult: jax.Array,  # [B, L]
+    max_distance: int,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused cover + §14 relevance: returns (emit, start, scores[B])."""
+    if use_kernel:
+        emit, start = proximity_window(occ, mult, max_distance, interpret=interpret)
+    else:
+        emit, start = proximity_window_ref(occ, mult, max_distance)
+    scores = fragment_scores_ref(emit, start)
+    return emit, start, scores

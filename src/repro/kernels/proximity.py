@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: parallel minimal-fragment cover (the Combiner's Step 3).
+
+Hardware mapping (see DESIGN.md §2):
+
+* the Position table's 64-bit masks become dense int32 occupancy rows in
+  VMEM — one row per subquery lemma, one lane per document position;
+* Bit Scan Forward disappears: a bitmask's sortedness is the lane order;
+* the Source/Processed queues become prefix counts (``C``) computed with
+  log2(N) doubling shifts on the VPU;
+* the §10.2 shrink loop becomes a static ``2*MaxDistance+1``-step window
+  scan, each step one shifted vector compare over all lemma rows.
+
+Grid: one program per document.  Block shapes keep the whole (padded)
+document in VMEM: ``occ`` is [L, N] int32 with N a multiple of 128 lanes,
+L <= 8 sublanes — ~32 KB for N=1024, far under the ~16 MB VMEM budget, so
+multiple docs pipeline cleanly (double buffering hides the HBM streams).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["proximity_window_kernel", "proximity_window"]
+
+
+def _shift_right(x: jax.Array, o: int) -> jax.Array:
+    """x[..., p] -> x[..., p-o] with zero fill (static o)."""
+    if o == 0:
+        return x
+    n = x.shape[-1]
+    pad = jnp.zeros(x.shape[:-1] + (o,), x.dtype)
+    return jnp.concatenate([pad, x[..., : n - o]], axis=-1)
+
+
+def proximity_window_kernel(
+    occ_ref,  # [1, L, N] int32
+    mult_ref,  # [1, L] int32
+    emit_ref,  # [1, N] int32 out
+    start_ref,  # [1, N] int32 out
+    *,
+    window: int,
+):
+    occ = occ_ref[0]  # [L, N]
+    mult = mult_ref[0]  # [L]
+    L, n = occ.shape
+
+    # prefix counts via doubling shifts (log2 N steps, VPU adds)
+    c = occ
+    k = 1
+    while k < n:
+        c = c + _shift_right(c, k)
+        k <<= 1
+
+    active = (mult > 0)[:, None]  # [L, 1]
+    is_event = jnp.any((occ > 0) & active, axis=0)  # [N]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    found = jnp.zeros((n,), jnp.bool_)
+    o_star = jnp.zeros((n,), jnp.int32)
+    for o in range(window):  # static unroll: window = 2*MaxDistance+1 <= 64
+        cq = _shift_right(c, o)
+        oq = _shift_right(occ, o)
+        cnt = c - cq + oq  # occurrences in [e-o, e]
+        cover = jnp.all((cnt >= mult[:, None]) | ~active, axis=0)
+        cover = cover & (pos >= o)
+        o_star = jnp.where(cover & ~found, o, o_star)
+        found = found | cover
+
+    emit_ref[0] = (found & is_event).astype(jnp.int32)
+    start_ref[0] = pos - o_star
+
+
+@functools.partial(jax.jit, static_argnames=("max_distance", "interpret"))
+def proximity_window(
+    occ: jax.Array,  # [B, L, N] int32
+    mult: jax.Array,  # [B, L] int32
+    max_distance: int,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched minimal-fragment cover via ``pl.pallas_call``.
+
+    Returns ``(emit bool [B, N], start int32 [B, N])`` — identical semantics
+    to ``kernels.ref.proximity_window_ref``.
+    """
+    b, l, n = occ.shape
+    window = 2 * max_distance + 1
+    kernel = functools.partial(proximity_window_kernel, window=window)
+    emit, start = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, l, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(occ.astype(jnp.int32), mult.astype(jnp.int32))
+    return emit.astype(jnp.bool_), start

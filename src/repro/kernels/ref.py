@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and ``assert_allclose`` against these
+references; the references themselves are validated against the paper-faithful
+scalar implementation in ``tests/test_vectorized.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.window import window_cover, window_cover_batch
+
+__all__ = [
+    "proximity_window_ref",
+    "intersect_ref",
+    "embedding_bag_ref",
+    "fragment_scores_ref",
+]
+
+
+def proximity_window_ref(
+    occ: jax.Array, mult: jax.Array, max_distance: int
+) -> tuple[jax.Array, jax.Array]:
+    """Batched minimal-fragment cover; see ``core/window.py``."""
+    emit, start = window_cover_batch(occ, mult, window=2 * max_distance + 1)
+    return emit, start
+
+
+def intersect_ref(a: jax.Array, b: jax.Array, pad_value: int = 2**31 - 1) -> jax.Array:
+    """Membership of each element of sorted ``a`` in sorted ``b`` (1/0)."""
+    idx = jnp.searchsorted(b, a)
+    idx = jnp.clip(idx, 0, b.shape[0] - 1)
+    hit = (b[idx] == a) & (a != pad_value)
+    return hit.astype(jnp.int32)
+
+
+def embedding_bag_ref(
+    table: jax.Array,  # [V, D]
+    indices: jax.Array,  # [B, K] (pad = -1)
+    weights: jax.Array | None = None,  # [B, K]
+) -> jax.Array:
+    """Sum-mode embedding bag with padding; the RecSys gather-reduce op."""
+    ok = (indices >= 0).astype(table.dtype)[..., None]
+    safe = jnp.maximum(indices, 0)
+    gathered = table[safe] * ok
+    if weights is not None:
+        gathered = gathered * weights[..., None].astype(table.dtype)
+    return gathered.sum(axis=1)
+
+
+def fragment_scores_ref(emit: jax.Array, start: jax.Array) -> jax.Array:
+    """§14 proximity relevance: sum of 1/(span+1)^2 over emitted fragments."""
+    n = emit.shape[-1]
+    span = jnp.arange(n, dtype=jnp.float32) - start.astype(jnp.float32)
+    contrib = jnp.where(emit, 1.0 / (span + 1.0) ** 2, 0.0)
+    return contrib.sum(axis=-1)

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost analysis + the collective schedule.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/]
+
+The XLA_FLAGS line above MUST run before any other jax-touching import —
+jax locks the device count at first init.  Smoke tests / benches never import
+this module, so they see the real single CPU device.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCH_IDS, get_spec
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .steps import Cell, build_cell
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True) -> dict:
+    spec = get_spec(arch)
+    cell_meta = spec.shapes[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rec: dict = {
+        "arch": arch, "shape": shape, "step": cell_meta.step,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": n_dev,
+        "kind": cell_meta.kind,
+    }
+    if cell_meta.skip_reason is not None:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell_meta.skip_reason
+        return rec
+    t0 = time.time()
+    try:
+        cell: Cell = build_cell(spec, shape, mesh)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def to_sharding(tree):
+            return jax.tree.map(
+                lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+                tree,
+                is_leaf=lambda x: isinstance(x, P) or x is None,
+            )
+
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=to_sharding(cell.in_specs),
+                out_shardings=to_sharding(cell.out_specs),
+            )
+            lowered = jitted.lower(*cell.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware per-device analysis (cost_analysis counts while
+        # bodies once — see hlo_analysis.py)
+        hc = analyze_hlo(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            # per-device numbers (shapes in the SPMD module are shard shapes)
+            flops_per_device=hc.flops,
+            hbm_bytes_per_device=hc.hbm_bytes,
+            collective_bytes_per_device=dict(hc.collectives),
+            collective_total_per_device=hc.collective_bytes,
+            xla_cost_flops_raw=float(cost.get("flops", 0.0)),
+            model_flops_global=float(cell.model_flops_fn()),
+            notes=cell.notes,
+        )
+        for attr in (
+            "temp_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "generated_code_size_in_bytes",
+        ):
+            if hasattr(mem, attr):
+                rec[attr] = int(getattr(mem, attr))
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} ({rec['mesh']}): OK "
+                  f"flops/dev={hc.flops:.3e} hbm/dev={hc.hbm_bytes:.3e} "
+                  f"coll/dev={hc.collective_bytes:.3e}B "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+    except Exception as e:  # a dry-run failure is a bug in the system
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape}: FAIL {rec['error'][:200]}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--include-skipped", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    targets: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            spec = get_spec(arch)
+            for name, c in spec.shapes.items():
+                targets.append((arch, name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        targets.append((args.arch, args.shape))
+
+    n_fail = 0
+    for multi_pod in meshes:
+        for arch, shape in targets:
+            tag = "multipod" if multi_pod else "singlepod"
+            safe_shape = shape.replace("[", "_").replace("]", "")
+            path = outdir / f"{arch}__{safe_shape}__{tag}.json"
+            if path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {arch} x {shape} ({tag}): cached")
+                    continue
+            rec = run_cell(arch, shape, multi_pod)
+            path.write_text(json.dumps(rec, indent=2))
+            if rec["status"] == "error":
+                n_fail += 1
+    print(f"[dryrun] done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,507 @@
+"""Cell builder: (architecture, shape) -> jit-able step + abstract inputs +
+sharding specs.  This is what both the dry-run and the real launchers use.
+
+All full-scale inputs are ``jax.ShapeDtypeStruct``s (params via
+``jax.eval_shape`` over the initializer) — nothing is allocated until a
+launcher decides to.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.common import ArchSpec, ShapeCell
+from ..models import gnn, recsys, transformer
+from ..optim import AdamWConfig, adamw_init, adamw_update, global_norm
+from ..parallel.sharding import (
+    batch_specs,
+    data_axes,
+    gnn_specs,
+    lm_param_specs,
+    recsys_param_specs,
+)
+from ..search.serving_step import build_step, serve_step_sharded
+
+__all__ = ["Cell", "build_cell"]
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    step: str
+    fn: Callable  # positional args match `abstract_args`
+    abstract_args: tuple
+    in_specs: tuple
+    out_specs: Any  # None -> let GSPMD infer
+    model_flops_fn: Callable[[], float]  # 6*N*D-style useful-work model
+    notes: str = ""
+
+
+# ---------------------------------------------------------------------------
+# spec sanitation: drop mesh axes that do not divide the dim
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    names = axis if isinstance(axis, tuple) else (axis,)
+    out = 1
+    for n in names:
+        out *= dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+    return out
+
+
+def sanitize_specs(spec_tree: Any, shape_tree: Any, mesh: Mesh) -> Any:
+    def fix(spec, leaf):
+        if spec is None or not isinstance(spec, P):
+            return spec
+        dims = leaf.shape
+        new = []
+        for i in range(len(dims)):
+            axis = spec[i] if i < len(spec) else None
+            if axis is None:
+                new.append(None)
+            elif dims[i] % _axis_size(mesh, axis) == 0:
+                new.append(axis)
+            else:
+                new.append(None)
+        return P(*new)
+
+    return jax.tree.map(
+        fix, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P) or x is None
+    )
+
+
+def _rep_like(tree: Any) -> Any:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    cfg: transformer.TransformerConfig = spec.cfg_for(cell.name)
+    if "sliding_window" in cell.kwargs:
+        cfg = dataclasses.replace(cfg, sliding_window=cell.kwargs["sliding_window"])
+    seq = cell.kwargs["seq_len"]
+    batch = cell.kwargs["global_batch"]
+    da = data_axes(mesh)
+    key = jax.random.key(0)
+    p_shapes = jax.eval_shape(functools.partial(transformer.init_params, cfg=cfg), key)
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    p_specs = lm_param_specs(p_shapes, kv_shardable=(cfg.n_kv_heads % tp == 0), fsdp=cfg.fsdp)
+
+    n_tok = batch * seq
+    n_active = cfg.active_param_count()
+
+    if cell.step == "train":
+        opt_cfg = AdamWConfig()
+        o_shapes = jax.eval_shape(adamw_init, p_shapes)
+        o_specs = {
+            "m": p_specs, "v": p_specs, "master": p_specs, "step": P(),
+        }
+        b_shapes = {
+            "tokens": S((batch, seq), jnp.int32),
+            "targets": S((batch, seq), jnp.int32),
+            "mask": S((batch, seq), jnp.int32),
+        }
+        b_specs = batch_specs(b_shapes, mesh)
+
+        n_micro = max(1, cfg.microbatches)
+
+        def train_fn(params, opt_state, bat):
+            if n_micro > 1:
+                # gradient accumulation: peak activation memory scales with
+                # B/n_micro instead of B (EXPERIMENTS.md §Perf-4).  The
+                # constraint pins the MICRO axis replicated and the batch
+                # axis data-sharded — otherwise GSPMD shards the micro axis
+                # and every device runs all microbatches (measured 5.75x
+                # compute, §Perf-4 refuted iteration).
+                mbs = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+                        P(None, da, *([None] * (x.ndim - 1))),
+                    ),
+                    bat,
+                )
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def micro(carry, mb):
+                    gacc, nll_a, aux_a = carry
+                    (loss, metrics), grads = jax.value_and_grad(
+                        transformer.loss_fn, has_aux=True
+                    )(params, mb, cfg)
+                    gacc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), gacc, grads
+                    )
+                    return (gacc, nll_a + metrics["nll"], aux_a + metrics["aux"]), None
+
+                (gacc, nll, aux), _ = jax.lax.scan(
+                    micro, (zero, jnp.zeros(()), jnp.zeros(())), mbs
+                )
+                grads = jax.tree.map(lambda g: g / n_micro, gacc)
+                nll, aux = nll / n_micro, aux / n_micro
+                loss = nll + cfg.aux_loss_weight * aux
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    transformer.loss_fn, has_aux=True
+                )(params, bat, cfg)
+                nll, aux = metrics["nll"], metrics["aux"]
+            master, new_state = adamw_update(grads, opt_state, opt_cfg)
+            new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+            out_metrics = {
+                "loss": loss, "nll": nll, "aux": aux,
+                "grad_norm": global_norm(grads),
+            }
+            return new_params, new_state, out_metrics
+
+        return Cell(
+            arch_id=spec.arch_id, shape_name=cell.name, step="train",
+            fn=train_fn,
+            abstract_args=(p_shapes, o_shapes, b_shapes),
+            in_specs=(
+                sanitize_specs(p_specs, p_shapes, mesh),
+                sanitize_specs(o_specs, o_shapes, mesh),
+                sanitize_specs(b_specs, b_shapes, mesh),
+            ),
+            out_specs=None,
+            model_flops_fn=lambda: 6.0 * n_active * n_tok,
+        )
+
+    if cell.step == "prefill":
+        tok = {"tokens": S((batch, seq), jnp.int32)}
+        t_specs = batch_specs(tok, mesh)
+
+        def prefill_fn(params, bat):
+            return transformer.prefill_step(params, bat["tokens"], cfg)
+
+        return Cell(
+            arch_id=spec.arch_id, shape_name=cell.name, step="prefill",
+            fn=prefill_fn,
+            abstract_args=(p_shapes, tok),
+            in_specs=(
+                sanitize_specs(p_specs, p_shapes, mesh),
+                sanitize_specs(t_specs, tok, mesh),
+            ),
+            out_specs=None,
+            model_flops_fn=lambda: 2.0 * n_active * n_tok,
+        )
+
+    # decode (decode_32k / long_500k)
+    dh = cfg.d_head
+    cache_shape = S((cfg.n_layers, batch, seq, cfg.n_kv_heads, dh), cfg.jdtype)
+    # context-parallel decode: cache sequence dim shards over `model`; the
+    # per-layer collectives are softmax stats + a [B,H,Dh] out psum (KBs)
+    # instead of gathering score/V tensors (EXPERIMENTS.md §Perf-2)
+    cache_spec = P(None, da, "model", None, None)
+    args = (
+        p_shapes,
+        {"k": cache_shape, "v": cache_shape},
+        S((batch, 1), jnp.int32),
+        S((), jnp.int32),
+    )
+    in_specs = (
+        sanitize_specs(p_specs, p_shapes, mesh),
+        sanitize_specs({"k": cache_spec, "v": cache_spec}, args[1], mesh),
+        sanitize_specs(P(da, None), args[2], mesh),
+        P(),
+    )
+
+    def decode_fn(params, cache, tokens, cache_len):
+        return transformer.decode_step(params, cache, tokens, cache_len, cfg)
+
+    # useful work for one decoded token: active params + KV reads
+    attended = min(seq, cfg.sliding_window or seq)
+    flops = 2.0 * n_active * batch + 4.0 * batch * attended * cfg.n_heads * dh * cfg.n_layers
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=cell.name, step="decode",
+        fn=decode_fn,
+        abstract_args=args,
+        in_specs=in_specs,
+        out_specs=None,
+        model_flops_fn=lambda: flops,
+        notes=f"sliding_window={cfg.sliding_window}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    cfg: gnn.GATConfig = spec.cfg_for(cell.name)
+    kw = cell.kwargs
+    n, e, f = kw["n_nodes"], kw["n_edges"], kw["d_feat"]
+    task_graph = kw["task"] == "graph"
+    n_graphs = kw.get("batch_graphs", 1)
+    key = jax.random.key(0)
+    p_shapes = jax.eval_shape(functools.partial(gnn.init_gat_params, cfg=cfg), key)
+    p_specs = _rep_like(p_shapes)  # GAT params are tiny: replicate
+    opt_cfg = AdamWConfig(lr=5e-3, weight_decay=5e-4)
+    o_shapes = jax.eval_shape(adamw_init, p_shapes)
+
+    b_shapes: dict[str, Any] = {
+        "x": S((n, f), jnp.float32),
+        "src": S((e,), jnp.int32),
+        "dst": S((e,), jnp.int32),
+        "edge_mask": S((e,), jnp.int32),
+        "labels": S((n_graphs if task_graph else n,), jnp.int32),
+        "label_mask": S((n_graphs if task_graph else n,), jnp.int32),
+    }
+    if task_graph:
+        b_shapes["graph_ids"] = S((n,), jnp.int32)
+    b_specs = gnn_specs(b_shapes, mesh, shard_nodes=kw.get("shard_nodes", False))
+    if task_graph:
+        b_specs["labels"] = P()
+        b_specs["label_mask"] = P()
+
+    def train_fn(params, opt_state, bat):
+        def loss(p):
+            return gnn.gat_loss(p, bat, cfg, n_graphs=n_graphs)
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        master, new_state = adamw_update(grads, opt_state, opt_cfg)
+        new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+        return new_params, new_state, {"loss": l, "acc": metrics["acc"]}
+
+    # SpMM-ish useful work: per edge per layer, gather+reduce over head dims
+    dims = cfg.layer_dims()
+    flops = 0.0
+    for fi, do in dims:
+        flops += 2.0 * n * fi * cfg.n_heads * do  # dense projections
+        flops += 6.0 * e * cfg.n_heads * do  # edge score + weighted aggregate
+    flops *= 3  # fwd + bwd(2x)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=cell.name, step="train",
+        fn=train_fn,
+        abstract_args=(p_shapes, o_shapes, b_shapes),
+        in_specs=(
+            p_specs,
+            _rep_like(o_shapes),
+            sanitize_specs(b_specs, b_shapes, mesh),
+        ),
+        out_specs=None,
+        model_flops_fn=lambda: flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch_shapes(cfg: recsys.RecsysConfig, cell: ShapeCell) -> dict[str, Any]:
+    b = cell.kwargs["batch"]
+    if cfg.model == "mind":
+        out = {
+            "hist_ids": S((b, cfg.hist_len), jnp.int32),
+            "target_id": S((b,), jnp.int32),
+        }
+    else:
+        out = {"sparse_ids": S((b, cfg.n_sparse), jnp.int32)}
+        if cfg.n_dense:
+            out["dense"] = S((b, cfg.n_dense), jnp.float32)
+    if cell.step == "train" and cfg.model != "mind":
+        out["label"] = S((b,), jnp.float32)
+    return out
+
+
+def _recsys_flops(cfg: recsys.RecsysConfig, batch: int) -> float:
+    d = cfg.embed_dim
+    if cfg.model == "fm":
+        per = 4.0 * cfg.n_sparse * d
+    elif cfg.model == "autoint":
+        da, h, f = cfg.d_attn, cfg.n_attn_heads, cfg.n_sparse
+        per = cfg.n_attn_layers * (6.0 * f * d * h * da + 4.0 * f * f * h * da)
+    elif cfg.model == "dcn_v2":
+        x0 = cfg.x0_dim
+        per = cfg.n_cross_layers * 2.0 * x0 * x0
+        fan = x0
+        for m in cfg.mlp_dims:
+            per += 2.0 * fan * m
+            fan = m
+    else:  # mind
+        per = cfg.capsule_iters * 6.0 * cfg.hist_len * cfg.n_interests * d + 2.0 * cfg.hist_len * d * d
+    return per * batch
+
+
+def _recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    cfg: recsys.RecsysConfig = spec.cfg_for(cell.name)
+    da = data_axes(mesh)
+    key = jax.random.key(0)
+    p_shapes = jax.eval_shape(functools.partial(recsys.init_recsys_params, cfg=cfg), key)
+    p_specs = recsys_param_specs(p_shapes)
+    b_shapes = _recsys_batch_shapes(cfg, cell)
+    b_specs = batch_specs(b_shapes, mesh)
+
+    if cell.step == "train":
+        opt_cfg = AdamWConfig(lr=1e-3, weight_decay=1e-5)
+        o_shapes = jax.eval_shape(adamw_init, p_shapes)
+        o_specs = {"m": p_specs, "v": p_specs, "master": p_specs, "step": P()}
+
+        def train_fn(params, opt_state, bat):
+            (l, metrics), grads = jax.value_and_grad(
+                recsys.recsys_loss, has_aux=True
+            )(params, bat, cfg)
+            master, new_state = adamw_update(grads, opt_state, opt_cfg)
+            new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+            return new_params, new_state, {"loss": l}
+
+        bsz = cell.kwargs["batch"]
+        return Cell(
+            arch_id=spec.arch_id, shape_name=cell.name, step="train",
+            fn=train_fn,
+            abstract_args=(p_shapes, o_shapes, b_shapes),
+            in_specs=(
+                sanitize_specs(p_specs, p_shapes, mesh),
+                sanitize_specs(o_specs, o_shapes, mesh),
+                sanitize_specs(b_specs, b_shapes, mesh),
+            ),
+            out_specs=None,
+            model_flops_fn=lambda: 3.0 * _recsys_flops(cfg, bsz),
+        )
+
+    if cell.step == "score":
+        def score_fn(params, bat):
+            return recsys.recsys_score(params, bat, cfg)
+
+        bsz = cell.kwargs["batch"]
+        return Cell(
+            arch_id=spec.arch_id, shape_name=cell.name, step="score",
+            fn=score_fn,
+            abstract_args=(p_shapes, b_shapes),
+            in_specs=(
+                sanitize_specs(p_specs, p_shapes, mesh),
+                sanitize_specs(b_specs, b_shapes, mesh),
+            ),
+            out_specs=None,
+            model_flops_fn=lambda: _recsys_flops(cfg, bsz),
+        )
+
+    # retrieval: one context vs n_candidates
+    c = cell.kwargs["n_candidates"]
+    b_shapes = _recsys_batch_shapes(cfg, cell)
+    b_shapes["cand_ids"] = S((c,), jnp.int32)
+    b_specs = {k: P() for k in b_shapes}
+    b_specs["cand_ids"] = P(da)
+
+    def retrieval_fn(params, bat):
+        return recsys.recsys_retrieval_score(params, bat, cfg)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_name=cell.name, step="retrieval",
+        fn=retrieval_fn,
+        abstract_args=(p_shapes, b_shapes),
+        in_specs=(
+            sanitize_specs(p_specs, p_shapes, mesh),
+            sanitize_specs(b_specs, b_shapes, mesh),
+        ),
+        out_specs=None,
+        model_flops_fn=lambda: _recsys_flops(cfg, c),
+    )
+
+
+# ---------------------------------------------------------------------------
+# paper_search cells
+# ---------------------------------------------------------------------------
+
+
+def _search_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    cfg = spec.model_cfg
+    da = data_axes(mesh)
+    if cell.step == "serve":
+        b = cell.kwargs["batch"]
+        p = cell.kwargs["postings"]
+        c = cell.kwargs["clusters"]
+        l, n, d = cfg.n_lemmas, cfg.window_len, cfg.max_distance
+        # document/cluster-sharded layout (§Perf-3): every device owns one
+        # cluster shard's postings end-to-end
+        ns = int(mesh.devices.size)
+        c_loc = max(1, -(-max(c, ns) // ns))
+        p_loc = max(1, -(-p // ns))
+        shard_axes = tuple(mesh.axis_names)
+        args = (
+            S((ns, b, p_loc, 3), jnp.int32),
+            S((ns, b, c_loc), jnp.int32),
+            S((b, l), jnp.int32),
+        )
+        in_specs = (
+            P(shard_axes, None, None, None),
+            P(shard_axes, None, None),
+            P(),
+        )
+
+        def fn(postings, cluster_doc, mult):
+            return serve_step_sharded(
+                postings, cluster_doc, mult,
+                max_distance=d, n_clusters=c_loc, window_len=n, top_k=cfg.top_k,
+            )
+
+        # useful work: the window cover — (2D+1) window steps x L lemmas x N
+        flops = float(b) * ns * c_loc * (2 * d + 1) * l * n * 4.0
+        return Cell(
+            arch_id=spec.arch_id, shape_name=cell.name, step="serve",
+            fn=fn, abstract_args=args, in_specs=in_specs, out_specs=None,
+            model_flops_fn=lambda: flops,
+        )
+
+    docs, doc_len = cell.kwargs["docs"], cell.kwargs["doc_len"]
+    d = cfg.max_distance
+    args = (S((docs, doc_len), jnp.int32), S((docs, doc_len), jnp.bool_))
+    in_specs = (
+        sanitize_specs(P(da, None), args[0], mesh),
+        sanitize_specs(P(da, None), args[1], mesh),
+    )
+
+    def fn(tokens, is_stop):
+        return build_step(tokens, is_stop, max_distance=d, n_buckets=cfg.build_buckets)
+
+    n_off = d * (2 * d - 1)
+    flops = float(docs) * doc_len * n_off * 6.0
+    return Cell(
+        arch_id=spec.arch_id, shape_name=cell.name, step="build",
+        fn=fn, abstract_args=args, in_specs=in_specs, out_specs=None,
+        model_flops_fn=lambda: flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh: Mesh) -> Cell:
+    cell = spec.shapes[shape_name]
+    if spec.family == "lm":
+        return _lm_cell(spec, cell, mesh)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, cell, mesh)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, cell, mesh)
+    if spec.family == "search":
+        return _search_cell(spec, cell, mesh)
+    raise ValueError(spec.family)
+
+
+def input_specs(arch_id: str, shape_name: str, mesh: Mesh | None = None) -> tuple:
+    """Public helper (dry-run contract): the ShapeDtypeStruct stand-ins for
+    every input of the (architecture x shape) cell — weak-type-correct,
+    shardable, no device allocation."""
+    from ..configs import get_spec
+    from .mesh import make_production_mesh
+
+    if mesh is None:
+        mesh = make_production_mesh()
+    return build_cell(get_spec(arch_id), shape_name, mesh).abstract_args

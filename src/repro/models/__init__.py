@@ -1,0 +1,3 @@
+from . import gnn, layers, moe, recsys, transformer
+
+__all__ = ["layers", "transformer", "moe", "gnn", "recsys"]

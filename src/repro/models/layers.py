@@ -1,0 +1,254 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (dense, chunked
+flash-style, sliding-window, decode), SwiGLU MLP.
+
+Everything is a pure function over explicit param pytrees; layer stacks are
+*stacked* along a leading axis and driven by ``jax.lax.scan`` so the HLO (and
+compile time on a 512-device mesh) stays one-layer-sized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "flash_attention",
+    "decode_attention",
+    "swiglu",
+    "dense_init",
+]
+
+Params = dict[str, Any]
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.bfloat16, scale: float | None = None) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)).astype(dtype)
+
+
+def _rope_angles(positions: jax.Array, d_head: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    cos, sin = _rope_angles(positions, d, theta)  # [..., S, half]
+    cos = cos[..., None, :]  # head axis
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,  # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    sliding_window: int | None = None,
+    remat_qblock: bool = False,
+) -> jax.Array:
+    """Online-softmax (FlashAttention-style) chunked attention in pure JAX.
+
+    Double ``lax.scan`` over query and KV chunks keeps the peak score tile at
+    ``[B, H, q_chunk, kv_chunk]`` — the memory-roofline lever for the 32k
+    prefill shapes.  ``sliding_window`` masks keys older than the window (the
+    sub-quadratic long-context mode; with it, whole KV chunks that fall out
+    of every query's window contribute zeros and XLA's masking keeps the
+    cost, while a real deployment also skips their HBM reads — see
+    DESIGN.md §6).
+
+    GQA handling under tensor parallelism (EXPERIMENTS.md §Perf-4): queries
+    keep the FLAT head layout [B, S, Hq, D] (Hq divides the TP axis for every
+    assigned arch; a grouped [Hkv, n_rep] layout divides for none of the
+    GQA ones and forces GSPMD reshards every layer).  KV heads are expanded
+    per *tile* with a constant-index ``take`` — on a replicated or aligned KV
+    tensor this is local lane duplication, never a collective, and the
+    full-sequence repeated KV is never materialized.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    n_rep = hq // hkv
+    scale = d ** -0.5
+    head_map = jnp.arange(hq) // n_rep  # q head -> kv head
+
+    import math
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    if sq % q_chunk:  # degrade to the largest divisor (odd smoke shapes)
+        q_chunk = math.gcd(sq, q_chunk)
+    if skv % kv_chunk:
+        kv_chunk = math.gcd(skv, kv_chunk)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    qr = q.reshape(b, nq, q_chunk, hq, d).transpose(1, 0, 3, 2, 4)  # [nq,B,Hq,Cq,D]
+    kr = k.reshape(b, nkv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)  # [nkv,B,Hkv,Ckv,D]
+    vr = v.reshape(b, nkv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+
+    q_pos_base = jnp.arange(q_chunk)
+    kv_pos_base = jnp.arange(kv_chunk)
+
+    def tile_update(carry, q_tile, q_pos, k_tile, v_tile, ki):
+        """One online-softmax tile: [B,Hq,Cq] stats + [B,Hq,Cq,D] acc."""
+        m, l, acc = carry
+        if n_rep > 1:  # tile-local KV head expansion (no collective)
+            k_tile = jnp.take(k_tile, head_map, axis=1)
+            v_tile = jnp.take(v_tile, head_map, axis=1)
+        kv_pos = ki * kv_chunk + kv_pos_base
+        s = jnp.einsum(
+            "bhqd,bhkd->bhqk", q_tile, k_tile,
+            preferred_element_type=jnp.float32,
+        ) * scale  # [B, Hq, Cq, Ckv]
+        mask = jnp.ones((q_chunk, kv_chunk), jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if sliding_window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - sliding_window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v_tile.dtype), v_tile,
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    def init_carry():
+        return (
+            jnp.full((b, hq, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((b, hq, q_chunk), jnp.float32),
+            jnp.zeros((b, hq, q_chunk, d), jnp.float32),
+        )
+
+    def q_block(qi, q_tile):
+        q_pos = q_offset + qi * q_chunk + q_pos_base  # absolute positions
+
+        def kv_block(carry, inp):
+            ki, k_tile, v_tile = inp
+            return tile_update(carry, q_tile, q_pos, k_tile, v_tile, ki), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init_carry(), (jnp.arange(nkv), kr, vr)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)
+
+    def paired_blocks(pi, q_lo, q_hi):
+        """Causal load balancing (§Perf-4): q-block pi pairs with nq-1-pi;
+        together they need exactly nq+1 kv tiles, so below-diagonal tiles
+        are never computed — attention FLOPs drop to the causal S^2/2."""
+        qi_lo = pi
+        qi_hi = nq - 1 - pi
+        pos_lo = q_offset + qi_lo * q_chunk + q_pos_base
+        pos_hi = q_offset + qi_hi * q_chunk + q_pos_base
+
+        def step(carry, s):
+            c_lo, c_hi = carry
+            use_lo = s <= qi_lo
+            ki = jnp.where(use_lo, jnp.minimum(s, qi_lo), s - (qi_lo + 1))
+            k_tile = jnp.take(kr, ki, axis=0)
+            v_tile = jnp.take(vr, ki, axis=0)
+            q_tile = jnp.where(use_lo, q_lo, q_hi)
+            q_pos = jnp.where(use_lo, pos_lo, pos_hi)
+            upd = tile_update(
+                jax.tree.map(lambda a, bb: jnp.where(use_lo, a, bb), c_lo, c_hi),
+                q_tile, q_pos, k_tile, v_tile, ki,
+            )
+            c_lo2 = jax.tree.map(lambda old, new: jnp.where(use_lo, new, old), c_lo, upd)
+            c_hi2 = jax.tree.map(lambda old, new: jnp.where(use_lo, old, new), c_hi, upd)
+            return (c_lo2, c_hi2), None
+
+        (c_lo, c_hi), _ = jax.lax.scan(
+            step, (init_carry(), init_carry()), jnp.arange(nq + 1)
+        )
+        outs = []
+        for m, l, acc in (c_lo, c_hi):
+            outs.append((acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype))
+        return outs[0], outs[1]
+
+    # the pairing walks kv tiles in q-chunk units -> chunk sizes must match
+    balanced = (
+        causal and sliding_window is None
+        and nq >= 2 and nq % 2 == 0 and q_chunk == kv_chunk
+    )
+    if balanced:
+        half = nq // 2
+        q_lo_stack = qr[:half]
+        q_hi_stack = qr[nq - 1 : half - 1 : -1] if half >= 1 else qr[:0]
+        pair_fn = jax.checkpoint(paired_blocks) if remat_qblock else paired_blocks
+        out_lo, out_hi = jax.lax.map(
+            lambda t: pair_fn(t[0], t[1], t[2]),
+            (jnp.arange(half), q_lo_stack, q_hi_stack),
+        )
+        out = jnp.concatenate([out_lo, out_hi[::-1]], axis=0)
+    else:
+        block = jax.checkpoint(q_block) if remat_qblock else q_block
+        out = jax.lax.map(lambda t: block(t[0], t[1]), (jnp.arange(nq), qr))
+    # [nq, B, Hq, Cq, D] -> [B, Sq, Hq, D]
+    return out.transpose(1, 0, 3, 2, 4).reshape(b, sq, hq, d)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, Hq, D]
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    cache_len: jax.Array | int,  # valid prefix length
+    sliding_window: int | None = None,
+) -> jax.Array:
+    """Single-token attention against a KV cache (serve_step).
+
+    GQA-aware (no repeated-KV materialization): with the cache Dh-sharded on
+    the model axis, the only collective left is the per-layer score psum —
+    ~[B,Hkv,r,S] fp32 — instead of an all-gather of the whole cache."""
+    b, s, hkv, d = k_cache.shape
+    hq = q.shape[2]
+    n_rep = hq // hkv
+    q2 = q.reshape(b, hkv, n_rep, d)
+    scale = d ** -0.5
+    scores = jnp.einsum(
+        "bhrd,bshd->bhrs", q2, k_cache, preferred_element_type=jnp.float32
+    ) * scale  # [B, Hkv, r, S]
+    pos = jnp.arange(s)
+    mask = pos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    if sliding_window is not None:
+        mask &= pos[None, :] >= jnp.asarray(cache_len).reshape(-1, 1) - sliding_window
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum(
+        "bhrs,bshd->bhrd", p, v_cache, preferred_element_type=jnp.float32
+    )
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("bsd,df->bsf", x, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, w_down, preferred_element_type=jnp.float32).astype(x.dtype)

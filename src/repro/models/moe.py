@@ -1,0 +1,260 @@
+"""Mixture-of-Experts FFN with two interchangeable dispatch strategies.
+
+* ``einsum``  — GShard-style one-hot dispatch/combine tensors.  Fully
+  GSPMD-friendly (pure einsums; experts shard on the ``model`` axis, tokens
+  on ``data``; the dispatch contraction lowers to an all-to-all).  Its known
+  tax: the dispatch einsum burns ``T*E*C*D`` FLOPs, significant when experts
+  are small (OLMoE's d_ff=1024) — visible in the roofline's
+  MODEL_FLOPS/HLO_FLOPs ratio and attacked in EXPERIMENTS.md §Perf.
+
+* ``sort``    — MegaBlocks-lite scatter dispatch: argsort tokens by expert,
+  position-in-expert from segment arithmetic, unique-destination scatter into
+  expert buffers.  No E×C one-hots; the cost is sort + gather/scatter (the
+  global argsort still reshards under GSPMD — see §Perf).
+
+* ``local``   — replicated-activation expert parallelism via ``shard_map``:
+  activations are data-sharded and replicated across the ``model`` axis, so
+  the model-column that owns an expert already holds every token locally —
+  routing needs NO communication at all.  Each column sorts/packs only its
+  own experts' tokens; the single collective is the per-layer psum of the
+  partial outputs ``[T_local, D]``.  This is the §Perf-1 optimized path.
+
+All share capacity semantics: per-expert buffer ``C = ceil(T*k/E * cf)``;
+overflow tokens are dropped (standard Switch behaviour).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import dense_init
+
+__all__ = ["MoEConfig", "init_moe_params", "moe_ffn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    dispatch: Literal["einsum", "sort", "local"] = "einsum"
+
+
+def init_moe_params(key: jax.Array, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d_model, cfg.n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (cfg.n_experts, d_model, cfg.d_ff), dtype),
+        "w_up": dense_init(ks[2], (cfg.n_experts, d_model, cfg.d_ff), dtype),
+        "w_down": dense_init(ks[3], (cfg.n_experts, cfg.d_ff, d_model), dtype),
+    }
+    if cfg.n_shared_experts:
+        f = cfg.d_ff * cfg.n_shared_experts
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], (d_model, f), dtype),
+            "w_up": dense_init(sk[1], (d_model, f), dtype),
+            "w_down": dense_init(sk[2], (f, d_model), dtype),
+        }
+    return p
+
+
+def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _router(x2d: jax.Array, params, cfg: MoEConfig):
+    logits = jnp.einsum(
+        "td,de->te", x2d.astype(jnp.float32), params["router"],
+        preferred_element_type=jnp.float32,
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+    # Switch load-balancing loss
+    me = gates.mean(axis=0)
+    return gates, me
+
+
+def _moe_einsum(x2d: jax.Array, params, cfg: MoEConfig):
+    t, d = x2d.shape
+    e, c = cfg.n_experts, _capacity(t, cfg)
+    gates, me = _router(x2d, params, cfg)
+
+    # identical selection + normalization across all dispatch strategies
+    w_topk, e_topk = jax.lax.top_k(gates, cfg.top_k)  # [T, k]
+    w_topk = w_topk / jnp.maximum(w_topk.sum(-1, keepdims=True), 1e-9)
+    base = jnp.zeros((e,), jnp.float32)
+    dispatch = jnp.zeros((t, e, c), x2d.dtype)
+    combine = jnp.zeros((t, e, c), jnp.float32)
+    ce = jnp.zeros((e,), jnp.float32)
+    for s_ in range(cfg.top_k):  # static unroll over slots
+        idx = e_topk[:, s_]
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # [T, E]
+        ce = ce + onehot.mean(axis=0)
+        w = w_topk[:, s_]  # [T]
+        pos = (jnp.cumsum(onehot, axis=0) - 1.0 + base[None, :])
+        base = base + onehot.sum(axis=0)
+        pos_tok = (pos * onehot).sum(axis=-1)  # [T] position in chosen expert
+        valid = pos_tok < c
+        pos_oh = jax.nn.one_hot(pos_tok.astype(jnp.int32), c, dtype=jnp.float32)
+        slot = onehot[:, :, None] * pos_oh[:, None, :] * valid[:, None, None]
+        dispatch = dispatch + slot.astype(x2d.dtype)
+        combine = combine + slot * w[:, None, None]
+
+    xe = jnp.einsum("tec,td->ecd", dispatch, x2d, preferred_element_type=x2d.dtype)
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x2d.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"], preferred_element_type=jnp.float32)
+    y = jnp.einsum("tec,ecd->td", combine.astype(x2d.dtype), ye.astype(x2d.dtype),
+                   preferred_element_type=jnp.float32)
+    aux = cfg.n_experts * jnp.sum(me * (ce / cfg.top_k))
+    return y.astype(x2d.dtype), aux
+
+
+def _moe_sort(x2d: jax.Array, params, cfg: MoEConfig):
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(t, cfg)
+    gates, me = _router(x2d, params, cfg)
+    w_topk, e_topk = jax.lax.top_k(gates, k)  # [T, k]
+    w_topk = w_topk / jnp.maximum(w_topk.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = e_topk.reshape(-1)  # [T*k]
+    w_flat = w_topk.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(e_flat)  # stable
+    e_s, w_s, tok_s = e_flat[order], w_flat[order], tok_flat[order]
+    counts = jnp.bincount(e_flat, length=e)
+    seg_start = jnp.cumsum(counts) - counts  # exclusive
+    pos_in_e = jnp.arange(t * k) - seg_start[e_s]
+    valid = pos_in_e < c
+    dest = jnp.where(valid, e_s * c + pos_in_e, 0)
+
+    buf = jnp.zeros((e * c, d), x2d.dtype)
+    vals = x2d[tok_s] * valid[:, None].astype(x2d.dtype)
+    buf = buf.at[dest].add(vals)  # unique destinations where valid
+    bufe = buf.reshape(e, c, d)
+    g = jnp.einsum("ecd,edf->ecf", bufe, params["w_gate"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", bufe, params["w_up"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x2d.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"], preferred_element_type=jnp.float32)
+    y_s = ye.reshape(e * c, d)[dest] * (valid * w_s)[:, None]
+    y = jnp.zeros((t, d), jnp.float32).at[tok_s].add(y_s)
+
+    ce = jnp.zeros((e,), jnp.float32).at[e_flat].add(1.0) / (t * k)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return y.astype(x2d.dtype), aux
+
+
+def _pack_local(x_loc, w_gate, w_up, w_down, gates, cfg: MoEConfig, n_cols: int):
+    """One model-column's expert compute: pack MY experts' tokens, matmul,
+    scatter back.  Pure local ops — runs inside shard_map."""
+    t_loc, d = x_loc.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_loc = w_gate.shape[0]  # experts owned by this column
+    col = jax.lax.axis_index("model")
+    lo = col * e_loc
+    w_topk, e_topk = jax.lax.top_k(gates, k)  # [T, k]
+    w_topk = w_topk / jnp.maximum(w_topk.sum(-1, keepdims=True), 1e-9)
+    e_flat = e_topk.reshape(-1)
+    w_flat = w_topk.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t_loc), k)
+    mine = (e_flat >= lo) & (e_flat < lo + e_loc)
+    le = jnp.where(mine, e_flat - lo, e_loc)  # sentinel e_loc sorts last
+    order = jnp.argsort(le)
+    le_s, w_s, tok_s = le[order], w_flat[order], tok_flat[order]
+    counts = jnp.bincount(le, length=e_loc + 1)
+    seg_start = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t_loc * k) - seg_start[le_s]
+    c = max(8, int(t_loc * k / e * cfg.capacity_factor + 7) // 8 * 8)
+    valid = (pos_in_e < c) & (le_s < e_loc)
+    dest = jnp.where(valid, le_s * c + pos_in_e, 0)
+    buf = jnp.zeros((e_loc * c, d), x_loc.dtype)
+    buf = buf.at[dest].add(x_loc[tok_s] * valid[:, None].astype(x_loc.dtype))
+    bufe = buf.reshape(e_loc, c, d)
+    g = jnp.einsum("ecd,edf->ecf", bufe, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", bufe, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x_loc.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down, preferred_element_type=jnp.float32)
+    y_s = ye.reshape(e_loc * c, d)[dest] * (valid * w_s)[:, None]
+    y = jnp.zeros((t_loc, d), jnp.float32).at[tok_s].add(y_s)
+    return y
+
+
+def _moe_local(x2d: jax.Array, params, cfg: MoEConfig):
+    """Replicated-activation EP: route locally, psum partial outputs."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names or "model" not in mesh.axis_names:
+        return _moe_sort(x2d, params, cfg)  # single-device fallback
+    sizes = dict(mesh.shape)
+    n_cols = sizes["model"]
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_data = 1
+    for a in data_axes:
+        n_data *= sizes[a]
+    # tokens must tile the data axes (decode with B=1 falls back)
+    if cfg.n_experts % n_cols or x2d.shape[0] % n_data:
+        return _moe_sort(x2d, params, cfg)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(data_axes, None),  # x2d: tokens data-sharded, replicated on model
+            P(),  # router
+            P("model", None, None),  # w_gate [E, D, F]
+            P("model", None, None),  # w_up
+            P("model", None, None),  # w_down
+        ),
+        out_specs=(P(data_axes, None), P()),
+        check_vma=False,
+    )
+    def inner(x_loc, router, w_gate, w_up, w_down):
+        logits = jnp.einsum(
+            "td,de->te", x_loc.astype(jnp.float32), router,
+            preferred_element_type=jnp.float32,
+        )
+        gates = jax.nn.softmax(logits, axis=-1)
+        y = _pack_local(x_loc, w_gate, w_up, w_down, gates, cfg, n_cols)
+        # the ONLY collective: combine per-column partial outputs
+        y = jax.lax.psum(y, "model")
+        # Switch aux loss from local statistics (identical in expectation)
+        me = gates.mean(axis=0)
+        _, e_topk = jax.lax.top_k(gates, cfg.top_k)
+        ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[e_topk.reshape(-1)].add(1.0)
+        ce = ce / (x_loc.shape[0] * cfg.top_k)
+        aux = cfg.n_experts * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, "model")
+        for ax in data_axes:
+            aux = jax.lax.pmean(aux, ax)
+        return y.astype(x_loc.dtype), aux
+
+    return inner(x2d, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+
+
+def moe_ffn(x: jax.Array, params, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y, aux_loss)."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    if cfg.dispatch == "local":
+        y, aux = _moe_local(x2d, params, cfg)
+    elif cfg.dispatch == "sort":
+        y, aux = _moe_sort(x2d, params, cfg)
+    else:
+        y, aux = _moe_einsum(x2d, params, cfg)
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        g = jnp.einsum("td,df->tf", x2d, sp["w_gate"], preferred_element_type=jnp.float32)
+        u = jnp.einsum("td,df->tf", x2d, sp["w_up"], preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(x2d.dtype)
+        y = y + jnp.einsum("tf,fd->td", h, sp["w_down"], preferred_element_type=jnp.float32).astype(x2d.dtype)
+    return y.reshape(b, s, d), aux

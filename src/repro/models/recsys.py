@@ -1,0 +1,325 @@
+"""RecSys / ranking models: FM, AutoInt, DCN-v2, MIND.
+
+The shared substrate is a single concatenated sparse-feature embedding table
+(``[total_vocab, dim]``, per-field row offsets) — the standard trick for
+sharding one huge table instead of many small ones.  JAX has no native
+``nn.EmbeddingBag``; :func:`embedding_bag` builds it from ``jnp.take`` +
+``jax.ops.segment_sum`` (multi-hot fields, padding = -1), as required.
+
+Every model exposes:
+  * ``loss``            — pointwise BCE (CTR models) / in-batch sampled
+                          softmax (MIND retrieval), for ``train_batch``;
+  * ``score``           — forward scores, for ``serve_p99`` / ``serve_bulk``;
+  * ``retrieval_score`` — one context against ``n_candidates`` items as a
+                          single batched-dot/broadcast forward (NO loops),
+                          for ``retrieval_cand``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = [
+    "RecsysConfig",
+    "embedding_bag",
+    "init_recsys_params",
+    "recsys_loss",
+    "recsys_score",
+    "recsys_retrieval_score",
+]
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag (gather + segment-reduce) — the RecSys hot path
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(
+    table: jax.Array,  # [V, D]
+    ids: jax.Array,  # [B, K] int32, pad = -1
+    weights: jax.Array | None = None,  # [B, K]
+    mode: str = "sum",
+) -> jax.Array:
+    """torch.nn.EmbeddingBag(sum/mean) built from take + masked reduce."""
+    ok = (ids >= 0)
+    safe = jnp.maximum(ids, 0)
+    emb = jnp.take(table, safe, axis=0)  # [B, K, D]
+    w = ok.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    out = (emb * w[..., None]).sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(ok.sum(axis=1, keepdims=True).astype(table.dtype), 1.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    model: str  # "fm" | "autoint" | "dcn_v2" | "mind"
+    n_sparse: int
+    embed_dim: int
+    field_vocab: tuple[int, ...]  # per-field vocabulary sizes
+    n_dense: int = 0
+    # autoint
+    n_attn_layers: int = 3
+    n_attn_heads: int = 2
+    d_attn: int = 32
+    # dcn-v2
+    n_cross_layers: int = 3
+    mlp_dims: tuple[int, ...] = (1024, 1024, 512)
+    # mind
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.field_vocab))
+
+    @property
+    def field_offsets(self) -> tuple[int, ...]:
+        off, acc = [], 0
+        for v in self.field_vocab:
+            off.append(acc)
+            acc += v
+        return tuple(off)
+
+    @property
+    def x0_dim(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        n = self.total_vocab * d
+        if self.model == "fm":
+            n += self.total_vocab + 1
+        elif self.model == "autoint":
+            da = self.d_attn * self.n_attn_heads
+            fan = d
+            for _ in range(self.n_attn_layers):
+                n += 3 * fan * da + fan * da  # qkv + residual proj
+                fan = da
+            n += self.n_sparse * fan
+        elif self.model == "dcn_v2":
+            x0 = self.x0_dim
+            n += self.n_cross_layers * (x0 * x0 + x0)
+            fan = x0
+            for m in self.mlp_dims:
+                n += fan * m + m
+                fan = m
+            n += (x0 + self.mlp_dims[-1]) + 1
+        elif self.model == "mind":
+            n += d * d + self.n_interests * d  # bilinear + interest init
+        return n
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_recsys_params(key: jax.Array, cfg: RecsysConfig) -> dict[str, Any]:
+    dt = cfg.jdtype
+    d = cfg.embed_dim
+    keys = jax.random.split(key, 16)
+    p: dict[str, Any] = {
+        "table": dense_init(keys[0], (cfg.total_vocab, d), dt, scale=0.01),
+    }
+    if cfg.model == "fm":
+        p["w_linear"] = dense_init(keys[1], (cfg.total_vocab,), dt, scale=0.01)
+        p["w0"] = jnp.zeros((), dt)
+    elif cfg.model == "autoint":
+        da, h = cfg.d_attn, cfg.n_attn_heads
+        fan = d
+        layers = []
+        for i in range(cfg.n_attn_layers):
+            k = jax.random.split(keys[2 + i], 4)
+            layers.append(
+                {
+                    "wq": dense_init(k[0], (fan, h, da), dt),
+                    "wk": dense_init(k[1], (fan, h, da), dt),
+                    "wv": dense_init(k[2], (fan, h, da), dt),
+                    "w_res": dense_init(k[3], (fan, h * da), dt),
+                }
+            )
+            fan = h * da
+        p["attn_layers"] = layers
+        p["w_out"] = dense_init(keys[10], (cfg.n_sparse * fan, 1), dt)
+    elif cfg.model == "dcn_v2":
+        x0 = cfg.x0_dim
+        p["cross_w"] = dense_init(keys[2], (cfg.n_cross_layers, x0, x0), dt)
+        p["cross_b"] = jnp.zeros((cfg.n_cross_layers, x0), dt)
+        mlp = []
+        fan = x0
+        for i, m in enumerate(cfg.mlp_dims):
+            mlp.append(
+                {
+                    "w": dense_init(jax.random.fold_in(keys[3], i), (fan, m), dt),
+                    "b": jnp.zeros((m,), dt),
+                }
+            )
+            fan = m
+        p["mlp"] = mlp
+        p["w_out"] = dense_init(keys[4], (x0 + cfg.mlp_dims[-1], 1), dt)
+    elif cfg.model == "mind":
+        p["bilinear"] = dense_init(keys[2], (d, d), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# model forwards
+# ---------------------------------------------------------------------------
+
+
+def _field_embeddings(params, cfg: RecsysConfig, sparse_ids: jax.Array) -> jax.Array:
+    """[B, F] per-field ids -> [B, F, D] (ids are field-local; offsets added)."""
+    off = jnp.asarray(cfg.field_offsets, jnp.int32)
+    return jnp.take(params["table"], sparse_ids + off[None, :], axis=0)
+
+
+def _fm_logit(params, cfg: RecsysConfig, sparse_ids: jax.Array) -> jax.Array:
+    """Rendle's O(nk) sum-square trick: ½((Σv)² − Σv²)."""
+    off = jnp.asarray(cfg.field_offsets, jnp.int32)
+    idx = sparse_ids + off[None, :]
+    v = jnp.take(params["table"], idx, axis=0)  # [B, F, K]
+    lin = jnp.take(params["w_linear"], idx, axis=0).sum(-1)  # [B]
+    s = v.sum(axis=1)  # [B, K]
+    pair = 0.5 * (s * s - (v * v).sum(axis=1)).sum(-1)
+    return params["w0"] + lin + pair
+
+
+def _autoint_logit(params, cfg: RecsysConfig, sparse_ids: jax.Array) -> jax.Array:
+    x = _field_embeddings(params, cfg, sparse_ids)  # [B, F, D]
+    for layer in params["attn_layers"]:
+        q = jnp.einsum("bfd,dhk->bfhk", x, layer["wq"])
+        k = jnp.einsum("bfd,dhk->bfhk", x, layer["wk"])
+        v = jnp.einsum("bfd,dhk->bfhk", x, layer["wv"])
+        s = jnp.einsum("bfhk,bghk->bhfg", q, k) / jnp.sqrt(jnp.asarray(cfg.d_attn, x.dtype))
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghk->bfhk", a, v)
+        o = o.reshape(*o.shape[:2], -1)  # [B, F, H*K]
+        x = jax.nn.relu(o + jnp.einsum("bfd,dk->bfk", x, layer["w_res"]))
+    flat = x.reshape(x.shape[0], -1)
+    return jnp.einsum("bi,io->bo", flat, params["w_out"])[:, 0]
+
+
+def _dcn_logit(
+    params, cfg: RecsysConfig, sparse_ids: jax.Array, dense: jax.Array
+) -> jax.Array:
+    emb = _field_embeddings(params, cfg, sparse_ids).reshape(sparse_ids.shape[0], -1)
+    x0 = jnp.concatenate([dense.astype(emb.dtype), emb], axis=-1)  # [B, X]
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        xw = jnp.einsum("bx,xy->by", x, params["cross_w"][i]) + params["cross_b"][i]
+        x = x0 * xw + x  # DCN-v2 cross
+    h = x0
+    for layer in params["mlp"]:
+        h = jax.nn.relu(jnp.einsum("bx,xy->by", h, layer["w"]) + layer["b"])
+    cat = jnp.concatenate([x, h], axis=-1)
+    return jnp.einsum("bi,io->bo", cat, params["w_out"])[:, 0]
+
+
+def _squash(x: jax.Array) -> jax.Array:
+    n2 = (x * x).sum(-1, keepdims=True)
+    return x * (n2 / (1.0 + n2)) / jnp.sqrt(jnp.maximum(n2, 1e-9))
+
+
+def _mind_interests(params, cfg: RecsysConfig, hist_ids: jax.Array) -> jax.Array:
+    """Behavior-to-Interest dynamic routing -> [B, n_interests, D]."""
+    e = embedding_bag_gather(params["table"], hist_ids)  # [B, T, D] w/ mask 0
+    mask = (hist_ids >= 0).astype(e.dtype)[..., None]
+    eh = jnp.einsum("btd,de->bte", e, params["bilinear"]) * mask
+    b = jnp.zeros((*hist_ids.shape, cfg.n_interests), e.dtype)  # routing logits
+    for _ in range(cfg.capsule_iters):  # static unroll (§MIND routing)
+        c = jax.nn.softmax(b, axis=-1) * mask  # [B, T, I]
+        s = jnp.einsum("bti,btd->bid", c, eh)
+        u = _squash(s)  # [B, I, D]
+        b = b + jnp.einsum("bid,btd->bti", u, eh)
+    return u
+
+
+def embedding_bag_gather(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Masked gather (pad = -1 -> zero rows); keeps the T axis."""
+    ok = (ids >= 0)[..., None]
+    return jnp.take(table, jnp.maximum(ids, 0), axis=0) * ok.astype(table.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public API: loss / score / retrieval
+# ---------------------------------------------------------------------------
+
+
+def recsys_score(params, batch: dict[str, jax.Array], cfg: RecsysConfig) -> jax.Array:
+    if cfg.model == "fm":
+        return _fm_logit(params, cfg, batch["sparse_ids"])
+    if cfg.model == "autoint":
+        return _autoint_logit(params, cfg, batch["sparse_ids"])
+    if cfg.model == "dcn_v2":
+        return _dcn_logit(params, cfg, batch["sparse_ids"], batch["dense"])
+    if cfg.model == "mind":
+        interests = _mind_interests(params, cfg, batch["hist_ids"])  # [B, I, D]
+        target = jnp.take(params["table"], batch["target_id"], axis=0)  # [B, D]
+        return jnp.einsum("bid,bd->bi", interests, target).max(axis=-1)
+    raise ValueError(cfg.model)
+
+
+def recsys_loss(params, batch: dict[str, jax.Array], cfg: RecsysConfig) -> tuple[jax.Array, dict]:
+    if cfg.model == "mind":
+        # in-batch sampled softmax with label-aware attention (p=2)
+        interests = _mind_interests(params, cfg, batch["hist_ids"])
+        targets = jnp.take(params["table"], batch["target_id"], axis=0)  # [B, D]
+        att = jax.nn.softmax(
+            2.0 * jnp.einsum("bid,bd->bi", interests, targets), axis=-1
+        )
+        user = jnp.einsum("bi,bid->bd", att, interests)  # [B, D]
+        logits = jnp.einsum("bd,cd->bc", user, targets)  # in-batch negatives
+        labels = jnp.arange(user.shape[0])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        loss = (logz - gold).mean()
+        return loss, {"loss": loss}
+    logit = recsys_score(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logit, 0.0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+    return loss, {"loss": loss}
+
+
+def recsys_retrieval_score(
+    params, batch: dict[str, jax.Array], cfg: RecsysConfig
+) -> jax.Array:
+    """One context vs n_candidates as one batched forward (no loops).
+
+    ``batch["cand_ids"]``: [C] candidate item ids (field 0 for CTR models).
+    """
+    cand = batch["cand_ids"]  # [C]
+    if cfg.model == "mind":
+        interests = _mind_interests(params, cfg, batch["hist_ids"])  # [1, I, D]
+        cand_emb = jnp.take(params["table"], cand, axis=0)  # [C, D]
+        return jnp.einsum("bid,cd->bci", interests, cand_emb).max(axis=-1)[0]
+    # CTR models: broadcast the context row across candidates (item = field 0)
+    ctx = batch["sparse_ids"]  # [1, F]
+    c = cand.shape[0]
+    ids = jnp.broadcast_to(ctx, (c, ctx.shape[1])).at[:, 0].set(cand)
+    b2 = {"sparse_ids": ids}
+    if cfg.model == "dcn_v2":
+        b2["dense"] = jnp.broadcast_to(batch["dense"], (c, batch["dense"].shape[1]))
+    return recsys_score(params, b2, cfg)

@@ -1,0 +1,360 @@
+"""Decoder-only transformer family (dense / GQA / MoE / sliding-window).
+
+One code path serves all five assigned LM architectures; layer stacks are
+scanned (stacked params, one-layer HLO) and optionally remat'd, attention is
+chunked online-softmax (``layers.flash_attention``) so 32k prefill fits, and
+the KV cache supports both full and sliding-window (sub-quadratic) modes.
+
+Step functions (lowered by the dry-run):
+  * ``loss_fn``       — next-token cross-entropy (+ MoE aux), for train_4k
+  * ``prefill_step``  — full-sequence forward, emits the KV cache + last logits
+  * ``decode_step``   — one token against a KV cache, for decode_32k/long_500k
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import decode_attention, dense_init, flash_attention, rms_norm, rope
+from .moe import MoEConfig, init_moe_params, moe_ffn
+
+__all__ = ["TransformerConfig", "init_params", "forward", "loss_fn", "prefill_step", "decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    moe: MoEConfig | None = None
+    moe_interleave: int = 1  # 2 = alternate dense/MoE FFNs (Llama-4 style)
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+    remat: bool = True
+    remat_block: int = 1  # sqrt-remat: checkpoint every `remat_block` layers
+    microbatches: int = 1  # gradient-accumulation chunks per train step
+    fsdp: bool = False  # ZeRO-3: params+opt sharded over `data`, gathered per layer
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    aux_loss_weight: float = 0.01
+    dtype: str = "bfloat16"
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_moe_layers(self) -> int:
+        if self.moe is None:
+            return 0
+        return self.n_layers // self.moe_interleave
+
+    def _attn_params(self) -> int:
+        d, dh = self.d_model, self.d_head
+        return d * self.n_heads * dh + 2 * d * self.n_kv_heads * dh + self.n_heads * dh * d
+
+    def param_count(self) -> int:
+        """Total parameters N (for MODEL_FLOPS = 6*N*D bookkeeping)."""
+        d = self.d_model
+        attn = self._attn_params()
+        n_moe = self.n_moe_layers
+        n_dense = self.n_layers - n_moe
+        ffn_dense = 3 * d * self.d_ff
+        total = n_dense * (attn + ffn_dense + 2 * d)
+        if self.moe is not None:
+            ffn_moe = 3 * d * self.moe.d_ff * self.moe.n_experts + d * self.moe.n_experts
+            if self.moe.n_shared_experts:
+                ffn_moe += 3 * d * self.moe.d_ff * self.moe.n_shared_experts
+            total += n_moe * (attn + ffn_moe + 2 * d)
+        return total + 2 * self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        attn = self._attn_params()
+        n_moe = self.n_moe_layers
+        n_dense = self.n_layers - n_moe
+        ffn_moe = 3 * d * self.moe.d_ff * (self.moe.top_k + self.moe.n_shared_experts)
+        total = n_dense * (attn + 3 * d * self.d_ff + 2 * d)
+        total += n_moe * (attn + ffn_moe + 2 * d)
+        return total + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, cfg: TransformerConfig, use_moe: bool) -> dict[str, Any]:
+    dt = cfg.jdtype
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "wq": dense_init(ks[0], (d, cfg.n_heads * dh), dt),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * dh), dt),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * dh), dt),
+        "wo": dense_init(ks[3], (cfg.n_heads * dh, d), dt),
+    }
+    if use_moe:
+        p["moe"] = init_moe_params(ks[4], d, cfg.moe, dt)
+    else:
+        p["ffn"] = {
+            "w_gate": dense_init(ks[5], (d, cfg.d_ff), dt),
+            "w_up": dense_init(ks[6], (d, cfg.d_ff), dt),
+            "w_down": dense_init(ks[7], (cfg.d_ff, d), dt),
+        }
+    return p
+
+
+def _interleaved(cfg: TransformerConfig) -> bool:
+    return cfg.moe is not None and cfg.moe_interleave > 1
+
+
+def _tp_size() -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names or "model" not in mesh.axis_names:
+        return 1
+    return dict(mesh.shape)["model"]
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict[str, Any]:
+    dt = cfg.jdtype
+    k_emb, k_un, k_layers = jax.random.split(key, 3)
+    if _interleaved(cfg):
+        # blocks of (dense layer, moe layer), scanned homogeneously
+        n_blocks = cfg.n_layers // cfg.moe_interleave
+        bkeys = jax.random.split(k_layers, n_blocks)
+        layers = jax.vmap(
+            lambda k: {
+                "dense_sub": _init_layer(jax.random.fold_in(k, 0), cfg, use_moe=False),
+                "moe_sub": _init_layer(jax.random.fold_in(k, 1), cfg, use_moe=True),
+            }
+        )(bkeys)
+    else:
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        layers = jax.vmap(lambda k: _init_layer(k, cfg, use_moe=cfg.moe is not None))(layer_keys)
+    return {
+        "embed": dense_init(k_emb, (cfg.vocab, cfg.d_model), dt, scale=0.02),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "unembed": dense_init(k_un, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _qkv(h: jax.Array, layer, cfg: TransformerConfig, positions: jax.Array):
+    b, s, d = h.shape
+    dh = cfg.d_head
+    x = rms_norm(h, layer["ln1"])
+    q = jnp.einsum("bsd,dk->bsk", x, layer["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = jnp.einsum("bsd,dk->bsk", x, layer["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = jnp.einsum("bsd,dk->bsk", x, layer["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(x: jax.Array, layer, cfg: TransformerConfig):
+    if "moe" in layer:
+        return moe_ffn(x, layer["moe"], cfg.moe)
+    f = layer["ffn"]
+    g = jnp.einsum("bsd,df->bsf", x, f["w_gate"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("bsd,df->bsf", x, f["w_up"], preferred_element_type=jnp.float32)
+    # w_down crosses the TP boundary: keep the output (= the all-reduce
+    # payload) in bf16 — §Perf-4
+    y = jnp.einsum("bsf,fd->bsd", (jax.nn.silu(g) * u).astype(x.dtype), f["w_down"])
+    return y, jnp.zeros((), jnp.float32)
+
+
+def _layer_fwd(h: jax.Array, layer, cfg: TransformerConfig, positions: jax.Array):
+    b, s, d = h.shape
+    if cfg.fsdp:
+        from ..parallel.sharding import fsdp_gather_layer
+
+        tp = _tp_size()
+        layer = fsdp_gather_layer(layer, kv_shardable=(cfg.n_kv_heads % tp == 0))
+    q, k, v = _qkv(h, layer, cfg, positions)
+    attn = flash_attention(
+        q, k, v,
+        causal=True,
+        q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk,
+        sliding_window=cfg.sliding_window,
+    ).reshape(b, s, cfg.n_heads * cfg.d_head)
+    h = h + jnp.einsum("bsk,kd->bsd", attn, layer["wo"]).astype(h.dtype)
+    x = rms_norm(h, layer["ln2"])
+    y, aux = _ffn(x, layer, cfg)
+    return h + y, (k, v), aux
+
+
+def forward(params, tokens: jax.Array, cfg: TransformerConfig, collect_cache: bool = False):
+    """tokens [B, S] -> (hidden [B, S, D], aux, optional cache [L,B,S,Hkv,Dh]x2)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None, :]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    interleaved = _interleaved(cfg)
+
+    def body(carry, layer):
+        hh, aux = carry
+        if interleaved:
+            hh, kv1, a1 = _layer_fwd(hh, layer["dense_sub"], cfg, positions)
+            hh, kv2, a2 = _layer_fwd(hh, layer["moe_sub"], cfg, positions)
+            a = a1 + a2
+            kv = (jnp.stack([kv1[0], kv2[0]]), jnp.stack([kv1[1], kv2[1]]))
+        else:
+            hh, kv, a = _layer_fwd(hh, layer, cfg, positions)
+        ys = kv if collect_cache else None
+        return (hh, aux + a), ys
+
+    layers = params["layers"]
+    rb = max(1, cfg.remat_block)
+    n_stack = jax.tree.leaves(layers)[0].shape[0]
+    if cfg.remat and rb > 1 and n_stack % rb == 0:
+        # sqrt-remat (EXPERIMENTS.md §Perf-4): checkpoint BLOCKS of rb
+        # layers — the bwd residual footprint drops from n_stack
+        # activations to n_stack/rb, at one extra fwd per block
+        grouped = jax.tree.map(
+            lambda x: x.reshape(n_stack // rb, rb, *x.shape[1:]), layers
+        )
+
+        def block_body(carry, block):
+            def inner(c, layer):
+                return body(c, layer)
+
+            c2, ys = jax.lax.scan(inner, carry, block)
+            return c2, ys
+
+        scan_body = jax.checkpoint(block_body)
+        (h, aux), kv = jax.lax.scan(
+            scan_body, (h, jnp.zeros((), jnp.float32)), grouped
+        )
+        if collect_cache:
+            kv = tuple(x.reshape(n_stack, *x.shape[2:]) for x in kv)
+    else:
+        scan_body = jax.checkpoint(body) if cfg.remat else body
+        (h, aux), kv = jax.lax.scan(
+            scan_body, (h, jnp.zeros((), jnp.float32)), layers
+        )
+    if collect_cache and interleaved:
+        # [nb, 2, B, S, H, Dh] -> [L, B, S, H, Dh]
+        kv = tuple(x.reshape(cfg.n_layers, *x.shape[2:]) for x in kv)
+    h = rms_norm(h, params["final_norm"])
+    return h, aux, kv
+
+
+def loss_fn(params, batch: dict[str, jax.Array], cfg: TransformerConfig) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy; ``batch`` = {"tokens", "targets", "mask"}."""
+    h, aux, _ = forward(params, batch["tokens"], cfg)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, params["unembed"], preferred_element_type=jnp.float32
+    )
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch["mask"].astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + cfg.aux_loss_weight * aux
+    return total, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(params, tokens: jax.Array, cfg: TransformerConfig):
+    """Full-sequence forward; returns (last-token logits [B,V], kv cache)."""
+    h, _, kv = forward(params, tokens, cfg, collect_cache=True)
+    logits = jnp.einsum(
+        "bd,dv->bv", h[:, -1], params["unembed"], preferred_element_type=jnp.float32
+    )
+    k_cache, v_cache = kv  # each [L, B, S, Hkv, Dh]
+    return logits, {"k": k_cache, "v": v_cache}
+
+
+def _sublayer_decode(hh, layer, kc, vc, cfg: TransformerConfig, positions, cache_len):
+    b = hh.shape[0]
+    dh = cfg.d_head
+    q, k, v = _qkv(hh, layer, cfg, positions)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, cache_len, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, cache_len, 0, 0))
+    w = cfg.sliding_window
+    s_cache = kc.shape[1]
+    if w is not None and s_cache > w:
+        # sub-quadratic long-context decode: attend only over the last
+        # window — O(w) compute against an O(S) cache (DESIGN.md §6)
+        start = jnp.clip(cache_len + 1 - w, 0, s_cache - w)
+        k_att = jax.lax.dynamic_slice(kc, (0, start, 0, 0), (kc.shape[0], w, *kc.shape[2:]))
+        v_att = jax.lax.dynamic_slice(vc, (0, start, 0, 0), (vc.shape[0], w, *vc.shape[2:]))
+        valid = jnp.minimum(cache_len + 1, w)
+        attn = decode_attention(q, k_att, v_att, valid)
+    else:
+        attn = decode_attention(q, kc, vc, cache_len + 1, sliding_window=w)
+    attn = attn.reshape(b, 1, cfg.n_heads * dh)
+    hh = hh + jnp.einsum("bsk,kd->bsd", attn, layer["wo"]).astype(hh.dtype)
+    x = rms_norm(hh, layer["ln2"])
+    y, _ = _ffn(x, layer, cfg)
+    return hh + y, kc, vc
+
+
+def decode_step(
+    params,
+    cache: dict[str, jax.Array],  # {"k","v"}: [L, B, S, Hkv, Dh]
+    tokens: jax.Array,  # [B, 1]
+    cache_len: jax.Array,  # scalar int32: filled prefix length
+    cfg: TransformerConfig,
+):
+    """One new token with a KV cache of length ``cache_len`` (serve_step)."""
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    h = jnp.take(params["embed"], tokens, axis=0)  # [B, 1, D]
+    interleaved = _interleaved(cfg)
+
+    k_in, v_in = cache["k"], cache["v"]
+    if interleaved:
+        nb = cfg.n_layers // cfg.moe_interleave
+        k_in = k_in.reshape(nb, 2, *k_in.shape[1:])
+        v_in = v_in.reshape(nb, 2, *v_in.shape[1:])
+
+    def body(hh, xs):
+        layer, kc, vc = xs
+        if interleaved:
+            hh, kc0, vc0 = _sublayer_decode(
+                hh, layer["dense_sub"], kc[0], vc[0], cfg, positions, cache_len
+            )
+            hh, kc1, vc1 = _sublayer_decode(
+                hh, layer["moe_sub"], kc[1], vc[1], cfg, positions, cache_len
+            )
+            return hh, (jnp.stack([kc0, kc1]), jnp.stack([vc0, vc1]))
+        hh, kc, vc = _sublayer_decode(hh, layer, kc, vc, cfg, positions, cache_len)
+        return hh, (kc, vc)
+
+    h, (k_new, v_new) = jax.lax.scan(body, h, (params["layers"], k_in, v_in))
+    if interleaved:
+        k_new = k_new.reshape(cfg.n_layers, *k_new.shape[2:])
+        v_new = v_new.reshape(cfg.n_layers, *v_new.shape[2:])
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum(
+        "bd,dv->bv", h[:, -1], params["unembed"], preferred_element_type=jnp.float32
+    )
+    return logits, {"k": k_new, "v": v_new}

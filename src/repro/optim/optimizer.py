@@ -1,0 +1,95 @@
+"""AdamW with fp32 master weights, global-norm clipping and cosine schedule.
+
+Implemented from scratch (no optax in the container).  The optimizer state
+is a pytree mirroring the params: fp32 ``m``/``v`` moments and an fp32
+``master`` copy (params themselves may live in bf16); sharding specs for the
+state reuse the param specs (ZeRO-style sharding is applied by the caller's
+PartitionSpecs, not here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def cosine_schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_init(params: Any) -> dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads: Any, state: dict[str, Any], cfg: AdamWConfig
+) -> tuple[Any, dict[str, Any]]:
+    """Returns (new bf16/bf32 params cast from master, new state)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v_new = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mh = m_new / b1c
+        vh = v_new / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master
+        master_new = master - lr * delta
+        return m_new, v_new, master_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_w = treedef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "master": new_w, "step": step}
+    return new_w, new_state
+
+
+def cast_like(master: Any, params_template: Any) -> Any:
+    return jax.tree.map(lambda w, p: w.astype(p.dtype), master, params_template)

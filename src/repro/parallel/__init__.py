@@ -1,0 +1,17 @@
+from .sharding import (
+    batch_specs,
+    lm_param_specs,
+    gnn_specs,
+    recsys_param_specs,
+    named_tree,
+    opt_state_specs,
+)
+
+__all__ = [
+    "batch_specs",
+    "lm_param_specs",
+    "gnn_specs",
+    "recsys_param_specs",
+    "named_tree",
+    "opt_state_specs",
+]

@@ -1,0 +1,223 @@
+"""Per-architecture sharding rules (GSPMD PartitionSpecs).
+
+Conventions (see DESIGN.md §4):
+
+* ``data``  — batch / tokens / edges / queries; gradient all-reduce axis.
+* ``model`` — TP: attention heads & FFN hidden; EP: MoE experts; embedding-
+  table rows (recsys); head-dim for KV caches (uniform across kv-head counts).
+* ``pod``   — outermost DP axis (multi-pod); composed with ``data`` for batch
+  dims via ``("pod", "data")``.
+
+Rules are name-keyed over the param pytree so they survive arbitrary nesting
+(`tree_map_with_path`); anything unmatched is replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "lm_param_specs",
+    "recsys_param_specs",
+    "gnn_specs",
+    "batch_specs",
+    "named_tree",
+    "opt_state_specs",
+    "data_axes",
+]
+
+
+def data_axes(mesh: Mesh):
+    """Batch axis spec: ('pod','data') on the multi-pod mesh, else 'data'."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# LM transformer
+# ---------------------------------------------------------------------------
+
+
+def _lm_rule(name: str, ndim: int, kv_shardable: bool = True, fsdp: bool = True) -> P:
+    """TP over `model`; FSDP/ZeRO over `data` on a second dim.
+
+    With ``fsdp`` the data axis additionally shards a weight dim; GSPMD
+    all-gathers each layer's weights at use inside the layer scan (classic
+    FSDP), which cuts resident params + optimizer state by the DP degree —
+    required for the 123B/400B cells to fit 16 GB HBM (EXPERIMENTS.md
+    §Perf-4)."""
+    dp = "data" if fsdp else None
+    # stacked layer params carry a leading L axis (never sharded)
+    if name.endswith("embed"):  # [V, D] -> rows on data, D on model
+        return P(dp, "model")
+    if name.endswith("unembed"):  # [D, V] -> V on model (sharded logits)
+        return P(dp, "model")
+    if name.endswith("wq"):  # [L, D, Hq*Dh]
+        return P(None, dp, "model")
+    if name.endswith("wk") or name.endswith("wv"):  # [L, D, Hkv*Dh]
+        # replicate KV projections over `model` when Hkv doesn't divide the
+        # TP axis: redundant-compute KV (a few GB) beats the per-layer
+        # reshard GSPMD otherwise inserts (EXPERIMENTS.md §Perf-4)
+        return P(None, dp, "model") if kv_shardable else P(None, dp, None)
+    if name.endswith("wo"):  # [L, H*Dh, D]
+        return P(None, "model", dp)
+    if name.endswith("w_gate") or name.endswith("w_up"):
+        if ndim == 4:  # moe experts [L, E, D, F] -> expert parallel + FSDP
+            return P(None, "model", dp, None)
+        if ndim == 3:  # dense [L, D, F] -> tensor parallel + FSDP
+            return P(None, dp, "model")
+        return P(dp, "model")  # shared expert [D, F]
+    if name.endswith("w_down"):
+        if ndim == 4:  # [L, E, F, D]
+            return P(None, "model", dp, None)
+        if ndim == 3:  # [L, F, D]
+            return P(None, "model", dp)
+        return P("model", dp)  # shared expert [F, D]
+    if name.endswith("router"):  # [L, D, E]
+        return P()
+    return P()  # norms etc. replicated
+
+
+def lm_param_specs(param_shapes: Any, kv_shardable: bool = True, fsdp: bool = True) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _lm_rule(_path_str(path), len(leaf.shape), kv_shardable, fsdp),
+        param_shapes,
+    )
+
+
+def fsdp_gather_layer(layer: Any, kv_shardable: bool = True) -> Any:
+    """Per-layer FSDP all-gather at use (inside the layer scan).
+
+    FSDP-sharded weights carry `data` on a dim; left to propagation, GSPMD
+    gathers the WHOLE stacked [L, ...] array before the scan (155 GB temps —
+    EXPERIMENTS.md §Perf-4 refuted iteration), and sharding *constraints*
+    inside the body still partition pathologically.  So the gather is an
+    EXPLICIT ``shard_map`` + ``lax.all_gather`` — the collective and its
+    transpose (a per-layer gradient reduce-scatter: exactly ZeRO) are pinned
+    down, nothing is left to partitioner cost models."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names or "data" not in mesh.axis_names:
+        return layer
+    # ONLY the axis the rule shards over ("data"); gathering over "pod" too
+    # would double the gathered dim (weights are replicated across pods)
+    gather_axes = ("data",)
+
+    def fix(path, x):
+        name = _path_str(path)
+        # the per-layer slice has no leading L dim: shift the rule right
+        full = _lm_rule("dummy/" + name.split("/")[-1], x.ndim + 1, kv_shardable, fsdp=True)
+        spec = P(*full[1:]) if len(full) > 1 else P()
+        dims = list(spec) + [None] * (x.ndim - len(spec))
+        if "data" not in [d for d in dims if isinstance(d, str)]:
+            return x
+        g_dim = dims.index("data")
+        out_dims = [d if d != "data" else None for d in dims]
+
+        def gather(w):
+            return jax.lax.all_gather(w, gather_axes, axis=g_dim, tiled=True)
+
+        return jax.shard_map(
+            gather, mesh=mesh, in_specs=P(*dims), out_specs=P(*out_dims),
+            check_vma=False,
+        )(x)
+
+    return jax.tree_util.tree_map_with_path(fix, layer)
+
+
+def lm_cache_spec() -> P:
+    """KV cache [L, B, S, Hkv, Dh]: batch on data, head-dim on model
+    (uniform: every assigned arch has Dh % 16 == 0, unlike Hkv)."""
+    return P(None, "data", None, None, "model")
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+
+def _recsys_rule(name: str, ndim: int) -> P:
+    if name.endswith("table"):  # [V, D] — THE memory: row-sharded
+        return P("model", None)
+    if name.endswith("w_linear"):  # FM [V]
+        return P("model")
+    if name.endswith("cross_w"):  # [C, X, X]
+        return P(None, None, "model")
+    if name.endswith("/w") or name.endswith("w_out"):  # MLP [in, out]
+        return P(None, "model") if ndim == 2 else P()
+    return P()
+
+
+def recsys_param_specs(param_shapes: Any) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _recsys_rule(_path_str(path), len(leaf.shape)), param_shapes
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+
+def gnn_specs(batch_shapes: dict[str, Any], mesh: Mesh, shard_nodes: bool) -> dict[str, P]:
+    """Edges always shard over (data, model) flattened; node tensors shard
+    over data only on the large graphs (ogbn-products), else replicate."""
+    da = data_axes(mesh)
+    edge_axes = (*da, "model") if isinstance(da, tuple) else ("data", "model")
+    out: dict[str, P] = {}
+    for k, v in batch_shapes.items():
+        nd = len(v.shape) if hasattr(v, "shape") else 0
+        if k in ("src", "dst", "edge_mask"):
+            out[k] = P(edge_axes)
+        elif k in ("x",):
+            out[k] = P("data", None) if shard_nodes else P()
+        elif k in ("labels", "label_mask", "graph_ids"):
+            out[k] = P("data") if shard_nodes else P()
+        else:
+            out[k] = P()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# generic helpers
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shapes: Any, mesh: Mesh) -> Any:
+    """Default data-parallel batch sharding: leading dim on (pod, data)."""
+    da = data_axes(mesh)
+
+    def rule(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return P(da, *([None] * (nd - 1)))
+
+    return jax.tree.map(rule, batch_shapes)
+
+
+def opt_state_specs(param_specs: Any) -> Any:
+    """Adam moments + fp32 master copy inherit the param specs (scalars
+    replicated)."""
+    return param_specs
+
+
+def named_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,4 @@
+from .fault_tolerance import RestartPolicy, run_with_restarts, StragglerMonitor
+from .elastic import ElasticTopology
+
+__all__ = ["RestartPolicy", "run_with_restarts", "StragglerMonitor", "ElasticTopology"]

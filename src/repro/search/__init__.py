@@ -1,0 +1,4 @@
+from .engine import SearchEngine, RankedDoc, QueryResponse
+from .relevance import fragment_score, rank_documents
+
+__all__ = ["SearchEngine", "RankedDoc", "QueryResponse", "fragment_score", "rank_documents"]

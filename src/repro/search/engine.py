@@ -1,0 +1,88 @@
+"""Query pipeline (paper §5, Figures 2–3).
+
+1) Lemmatization            — multi-lemma dictionary expansion.
+2) Building subqueries      — cartesian product over lemma alternatives.
+3) Processing subqueries    — key selection + one of the §4 algorithms.
+4) Combining results        — union of fragments, §14 proximity relevance.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Literal
+
+from ..core.baselines import (
+    se1_ordinary,
+    se21_main_cell,
+    se22_intermediate,
+    se23_optimized,
+)
+from ..core.combiner import se24_combiner
+from ..core.keys import Subquery, expand_subqueries
+from ..core.lemma import Lemmatizer
+from ..core.postings import QueryStats, SearchResult
+from ..index.builder import IndexSet
+from .relevance import rank_documents
+
+__all__ = ["SearchEngine", "RankedDoc", "QueryResponse", "ALGORITHMS"]
+
+Algorithm = Literal["se1", "se2.1", "se2.2", "se2.3", "se2.4"]
+
+ALGORITHMS: dict[str, Callable[[Subquery, IndexSet], tuple[list[SearchResult], QueryStats]]] = {
+    "se1": se1_ordinary,
+    "se2.1": se21_main_cell,
+    "se2.2": se22_intermediate,
+    "se2.3": se23_optimized,
+    "se2.4": se24_combiner,
+}
+
+
+@dataclass
+class RankedDoc:
+    doc_id: int
+    score: float
+    fragments: list[SearchResult]
+
+
+@dataclass
+class QueryResponse:
+    query: str
+    docs: list[RankedDoc]
+    stats: QueryStats
+    n_subqueries: int = 0
+
+
+class SearchEngine:
+    """Front door over one index shard (the distributed engine fans out to
+    many of these — see ``search/distributed.py``)."""
+
+    def __init__(
+        self,
+        index: IndexSet,
+        lemmatizer: Lemmatizer | None = None,
+        algorithm: Algorithm = "se2.4",
+    ):
+        self.index = index
+        self.lemmatizer = lemmatizer or Lemmatizer()
+        self.algorithm = algorithm
+
+    def search(self, query: str, top_k: int = 10) -> QueryResponse:
+        t0 = time.perf_counter()
+        fn = ALGORITHMS[self.algorithm]
+        subqueries = expand_subqueries(query, self.lemmatizer)
+        total = QueryStats()
+        all_results: set[SearchResult] = set()
+        for sub in subqueries:
+            results, stats = fn(sub, self.index)
+            total.merge(stats)
+            all_results.update(results)
+        ranked = [
+            RankedDoc(doc_id=d, score=s, fragments=f)
+            for d, s, f in rank_documents(all_results, top_k=top_k)
+        ]
+        total.results = len(all_results)
+        total.elapsed_sec = time.perf_counter() - t0
+        return QueryResponse(
+            query=query, docs=ranked, stats=total, n_subqueries=len(subqueries)
+        )

@@ -1,0 +1,36 @@
+"""Relevance calculation (paper §5 stage 4, §14).
+
+The paper adopts the proximity-relevance model of Yan et al. [20]: "the
+relevance of the document is inversely proportional to the square of the
+distance between searched words".  Each minimal fragment of span ``d``
+contributes ``1 / (d + 1)^2``; a document's score is the sum over its
+fragments, which rewards many tight co-occurrences.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Iterable, Sequence
+
+from ..core.postings import SearchResult
+
+__all__ = ["fragment_score", "rank_documents"]
+
+
+def fragment_score(result: SearchResult) -> float:
+    return 1.0 / float(result.span + 1) ** 2
+
+
+def rank_documents(
+    results: Iterable[SearchResult], top_k: int = 10
+) -> list[tuple[int, float, list[SearchResult]]]:
+    """(doc_id, score, fragments) sorted by decreasing score."""
+    per_doc: dict[int, list[SearchResult]] = defaultdict(list)
+    for r in results:
+        per_doc[r.doc_id].append(r)
+    scored = [
+        (doc, sum(fragment_score(r) for r in frs), sorted(frs))
+        for doc, frs in per_doc.items()
+    ]
+    scored.sort(key=lambda t: (-t[1], t[0]))
+    return scored[:top_k]

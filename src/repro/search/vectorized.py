@@ -1,0 +1,126 @@
+"""Vectorized (batched, device-side) subquery execution.
+
+This is the serving-path implementation of the Combiner: identical result
+semantics to ``core/combiner.py`` (validated in tests), but expressed as
+fixed-shape array programs — scatter postings into per-document occupancy,
+run the parallel window cover (Pallas kernel or jnp ref), read fragments out.
+
+Used by ``search/distributed.py`` (document-sharded shard_map serving) and
+by the ``paper_search`` architecture's ``serve_step``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.keys import SelectedKey, Subquery, select_keys
+from ..core.postings import QueryStats, SearchResult
+from ..core.window import results_from_cover
+from ..index.builder import IndexSet
+from ..kernels.ops import proximity_search_scores
+
+__all__ = ["VectorizedEngine", "pack_subquery_events"]
+
+
+@dataclass
+class PackedEvents:
+    """Fixed-shape per-document event tensors for one subquery."""
+
+    doc_ids: np.ndarray  # [B] int32 (pad = -1)
+    occ: np.ndarray  # [B, L, N] int32
+    mult: np.ndarray  # [L] int32
+    lemmas: list[str]  # local lemma id -> lemma
+
+
+def pack_subquery_events(
+    subquery: Subquery,
+    index: IndexSet,
+    keys: Sequence[SelectedKey] | None = None,
+    doc_len: int = 512,
+    stats: QueryStats | None = None,
+) -> PackedEvents:
+    """Host-side: key postings -> dense per-doc occupancy (§10.4's Set calls,
+    batched).  Dedup is free: occupancy is idempotent under scatter."""
+    keys = list(keys) if keys is not None else select_keys(subquery, index.fl)
+    lemmas = subquery.unique_lemmas()
+    lid = {l: i for i, l in enumerate(lemmas)}
+    L = len(lemmas)
+    mult_map = subquery.multiplicity()
+    mult = np.array([mult_map[l] for l in lemmas], dtype=np.int32)
+
+    # vectorized event extraction: one (doc, pos, lemma) column set per
+    # unstarred key slot — no per-posting Python work
+    ev_doc, ev_pos, ev_lem = [], [], []
+    for key in keys:
+        rows = np.asarray(index.key_postings(key.components))
+        if stats is not None:
+            stats.postings_read += len(rows)
+            stats.bytes_read += rows.nbytes
+        if not len(rows):
+            continue
+        comps, stars = key.components, key.starred
+        for slot in range(len(comps)):
+            if stars[slot]:
+                continue
+            pos = rows[:, 1] if slot == 0 else rows[:, 1] + rows[:, 1 + slot]
+            ev_doc.append(rows[:, 0])
+            ev_pos.append(pos)
+            ev_lem.append(np.full(len(rows), lid[comps[slot]], np.int32))
+    if ev_doc:
+        doc_a = np.concatenate(ev_doc)
+        pos_a = np.concatenate(ev_pos)
+        lem_a = np.concatenate(ev_lem)
+        ok = (pos_a >= 0) & (pos_a < doc_len)
+        doc_a, pos_a, lem_a = doc_a[ok], pos_a[ok], lem_a[ok]
+        docs, doc_idx = np.unique(doc_a, return_inverse=True)
+    else:
+        docs = np.empty((0,), np.int32)
+    # pad the doc batch to a power of two: stable shapes -> jit cache hits
+    b_real = max(1, len(docs))
+    B = 1 << (b_real - 1).bit_length()
+    occ_t = np.zeros((B, L, doc_len), dtype=np.int32)
+    doc_ids = np.full((B,), -1, dtype=np.int32)
+    if len(docs):
+        occ_t[doc_idx, lem_a, pos_a] = 1
+        doc_ids[: len(docs)] = docs
+    return PackedEvents(doc_ids=doc_ids, occ=occ_t, mult=mult, lemmas=lemmas)
+
+
+class VectorizedEngine:
+    """Batched Combiner over one index shard."""
+
+    def __init__(self, index: IndexSet, use_kernel: bool = False, doc_len: int = 512):
+        self.index = index
+        self.use_kernel = use_kernel
+        self.doc_len = doc_len
+
+    def search_subquery(
+        self, subquery: Subquery
+    ) -> tuple[list[SearchResult], QueryStats]:
+        stats = QueryStats()
+        packed = pack_subquery_events(
+            subquery, self.index, doc_len=self.doc_len, stats=stats
+        )
+        B = packed.occ.shape[0]
+        mult = np.broadcast_to(packed.mult, (B, packed.mult.shape[0]))
+        emit, start, scores = proximity_search_scores(
+            jnp.asarray(packed.occ),
+            jnp.asarray(mult),
+            self.index.max_distance,
+            use_kernel=self.use_kernel,
+        )
+        emit_np, start_np = np.asarray(emit), np.asarray(start)
+        results: list[SearchResult] = []
+        for i, doc in enumerate(packed.doc_ids.tolist()):
+            if doc < 0:
+                continue
+            for d, s, e in results_from_cover(doc, emit_np[i], start_np[i]):
+                results.append(SearchResult(doc_id=d, start=s, end=e))
+        stats.results = len(results)
+        return results, stats

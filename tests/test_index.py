@@ -1,0 +1,87 @@
+"""Index builder (§3), including the paper's D0/D1 example records."""
+
+import numpy as np
+
+from repro.core.lemma import Lemmatizer
+from repro.index import DocumentStore, PAPER_EXAMPLE_DOCS, build_indexes
+
+
+def _example_index(max_distance=5):
+    # the third text pins the paper's FL order (be more frequent than who)
+    # without adding any (be, who, who) postings — it contains no "who"
+    texts = list(PAPER_EXAMPLE_DOCS) + ["is is is is is is"]
+    store = DocumentStore.from_texts(texts)
+    # make every lemma a stop lemma so all triples materialize
+    return build_indexes(store, sw_count=10_000, fu_count=0,
+                         max_distance=max_distance)
+
+
+def test_paper_be_who_who_records():
+    """§3: key (be, who, who) must contain exactly the paper's records:
+    (0,3,-3,5), (1,4,-4,-1), (1,4,-1,2), (1,4,-4,2), (1,7,-4,-1)."""
+    idx = _example_index()
+    fl = idx.fl
+    key = tuple(sorted(["be", "who", "who"], key=fl.number))
+    rows = idx.key_postings(key)
+    got = {tuple(int(x) for x in r) for r in rows}
+    expected = {(0, 3, -3, 5), (1, 4, -4, -1), (1, 4, -1, 2), (1, 4, -4, 2),
+                (1, 7, -4, -1)}
+    assert expected <= got, f"missing: {expected - got}"
+    # no duplicate unordered pairs: d1 < d2 for s == t keys
+    for _, _, d1, d2 in got:
+        assert d1 < d2
+
+
+def test_paper_you_are_who_record():
+    """§3: key (you, are, who) contains (0, 2, -1, -2)."""
+    idx = _example_index()
+    fl = idx.fl
+    comps = sorted(["you", "are", "who"], key=fl.number)
+    rows = idx.key_postings(tuple(comps))
+    # the record anchored at "you" (position 2 in D0)
+    anchored = {tuple(int(x) for x in r) for r in rows if r[0] == 0 and r[1] == 2}
+    # depending on FL order the canonical anchor may differ; check the
+    # paper's record when "you" is the most frequent
+    if comps[0] == "you":
+        assert (0, 2, -1, -2) in anchored or (0, 2, -2, -1) in anchored
+
+
+def test_postings_sorted_and_within_distance():
+    idx = _example_index(max_distance=5)
+    for key, rows in list(idx.triple.items())[:200]:
+        arr = np.asarray(rows)
+        # §4 order: lexicographic over (ID, P, D1, D2)
+        as_tuples = [tuple(r) for r in arr.tolist()]
+        assert as_tuples == sorted(as_tuples)
+        assert np.all(np.abs(arr[:, 2]) <= 5)
+        assert np.all(np.abs(arr[:, 3]) <= 5)
+
+
+def test_triple_keys_are_all_stop_and_canonical(small_index):
+    fl = small_index.fl
+    for (f, s, t) in list(small_index.triple)[:300]:
+        assert fl.is_stop(f) and fl.is_stop(s) and fl.is_stop(t)
+        assert fl.number(f) <= fl.number(s) <= fl.number(t)
+
+
+def test_nsw_records_reference_stop_lemmas(small_index):
+    fl = small_index.fl
+    checked = 0
+    for lemma, rec in list(small_index.nsw.items())[:20]:
+        assert rec.offsets[-1] == len(rec.stop_lemma)
+        assert np.all(np.abs(rec.distance) <= small_index.max_distance)
+        for n in rec.stop_lemma[:50]:
+            assert n < fl.sw_count  # FL-numbers of stop lemmas
+        checked += 1
+    assert checked
+
+
+def test_pair_index_types(small_index):
+    from repro.core.lemma import LemmaType
+
+    fl = small_index.fl
+    for (w, v) in list(small_index.pair)[:200]:
+        assert fl.lemma_type(w) == LemmaType.FREQUENTLY_USED
+        assert fl.lemma_type(v) in (LemmaType.FREQUENTLY_USED, LemmaType.ORDINARY)
+        if fl.lemma_type(v) == LemmaType.FREQUENTLY_USED:
+            assert fl.number(w) < fl.number(v)

@@ -1,0 +1,69 @@
+"""§6 key selection, including the paper's Lord Hornblower example."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.keys import Subquery, select_keys
+from repro.core.lemma import FLList
+
+
+def _fl(freqs):
+    return FLList.from_frequencies(freqs, sw_count=len(freqs), fu_count=0)
+
+
+def test_paper_hornblower_example():
+    """'Who are you and why did you say what you did' (§6).
+
+    FL-numbers from the paper: and=28, you=47, what=132, do=154, say=165,
+    are=268, who=293, why=528.
+    """
+    freqs = {"and": 1000, "you": 900, "what": 800, "do": 700, "say": 600,
+             "are": 500, "who": 400, "why": 300}
+    fl = _fl(freqs)
+    sub = Subquery(("who", "are", "you", "and", "why", "do", "you", "say",
+                    "what", "you", "do"))
+    keys = select_keys(sub, fl)
+    assert len(keys) == 3
+    # key 1: (and, why, who) selection order; canonical = FL order
+    assert set(keys[0].components) == {"and", "who", "why"}
+    assert keys[0].starred == (False, False, False)
+    # key 2: (you, are, say)
+    assert set(keys[1].components) == {"you", "are", "say"}
+    assert keys[1].starred == (False, False, False)
+    # key 3: (what, do, why*) — why is the starred duplicate
+    assert set(keys[2].components) == {"what", "do", "why"}
+    stars = dict(zip(keys[2].components, keys[2].starred))
+    assert stars["why"] is True
+    assert stars["what"] is False and stars["do"] is False
+
+
+def test_canonical_order_is_fl_order():
+    fl = _fl({"a": 100, "b": 50, "c": 10})
+    (key,) = select_keys(Subquery(("c", "a", "b")), fl)
+    assert key.components == ("a", "b", "c")
+
+
+def test_first_component_most_frequent_unused():
+    fl = _fl({"a": 100, "b": 50, "c": 10, "d": 5})
+    keys = select_keys(Subquery(("d", "c", "b", "a")), fl)
+    # first key's most frequent component must be 'a'
+    assert keys[0].components[0] == "a"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from("abcdefgh"), min_size=1, max_size=8))
+def test_selection_invariants(lemmas):
+    freqs = {c: 100 - i for i, c in enumerate("abcdefgh")}
+    fl = _fl(freqs)
+    sub = Subquery(tuple(lemmas))
+    keys = select_keys(sub, fl)
+    covered = set()
+    for k in keys:
+        assert len(k.components) == min(3, max(1, len(lemmas)))
+        # canonical order
+        nums = [fl.number(c) for c in k.components]
+        assert nums == sorted(nums)
+        # first component of every key is unstarred
+        order = sorted(range(len(k.components)), key=lambda i: fl.number(k.components[i]))
+        covered.update(c for c, s in zip(k.components, k.starred) if not s)
+    # every unique lemma is covered by an unstarred component
+    assert covered == set(lemmas)

@@ -1,0 +1,42 @@
+"""Lemmatization + FL-list (paper §2)."""
+
+import pytest
+
+from repro.core.lemma import FLList, Lemmatizer, LemmaType, tokenize
+
+
+def test_paper_multi_lemma_examples(lemmatizer):
+    # §5: "who are you who" -> [who] [are, be] [you] [who]
+    assert lemmatizer.lemmas("are") == ("are", "be")
+    assert lemmatizer.lemmas("is") == ("be",)
+    assert lemmatizer.lemmas("has") == ("have",)
+    assert lemmatizer.lemmas("who") == ("who",)
+
+
+def test_tokenize():
+    assert tokenize("Who are you, is The Album?") == [
+        "who", "are", "you", "is", "the", "album",
+    ]
+
+
+def test_fl_list_ordering():
+    fl = FLList.from_frequencies({"you": 1000, "who": 500, "rare": 3},
+                                 sw_count=2, fu_count=1)
+    # §2: "you" < "who" because you is more frequent
+    assert fl.number("you") < fl.number("who")
+    assert fl.compare("you", "who") == -1
+    assert fl.lemma_type("you") == LemmaType.STOP
+    assert fl.lemma_type("who") == LemmaType.STOP
+    assert fl.lemma_type("rare") == LemmaType.FREQUENTLY_USED
+
+
+def test_fl_unknown_is_ordinary():
+    fl = FLList.from_frequencies({"a": 10}, sw_count=1, fu_count=1)
+    assert fl.lemma_type("zzz") == LemmaType.ORDINARY
+    assert fl.number("zzz") == len(fl)
+
+
+def test_suffix_rules(lemmatizer):
+    assert lemmatizer.lemmas("albums") == ("album",)
+    assert lemmatizer.lemmas("running")[0] == "run"
+    assert lemmatizer.lemmas("cries") == ("cry",)

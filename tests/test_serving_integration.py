@@ -1,0 +1,69 @@
+"""Integration: the ``paper_search`` device serve_step must reproduce the
+host engine's §14 ranking when fed the same postings (clusters == documents).
+This ties the dry-run's arch to the paper-faithful implementation."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.keys import expand_subqueries, select_keys
+from repro.search.engine import SearchEngine
+from repro.search.serving_step import serve_step
+from repro.search.vectorized import pack_subquery_events
+
+
+@pytest.mark.parametrize("query", ["who are you who", "what do you do all day"])
+def test_serve_step_matches_engine_ranking(query, small_index, lemmatizer):
+    sub = expand_subqueries(query, lemmatizer)[0]
+    packed = pack_subquery_events(sub, small_index, doc_len=128)
+    n_docs = packed.occ.shape[0]
+    L, N = packed.occ.shape[1], packed.occ.shape[2]
+    # clusters == documents; postings = occupancy events re-encoded
+    events = np.argwhere(packed.occ > 0)  # (doc, lemma, pos)
+    P = 1 + len(events)
+    postings = np.full((1, P, 3), -1, np.int32)
+    for i, (d, l, p) in enumerate(events):
+        postings[0, i] = (d, p, l)
+    cluster_doc = packed.doc_ids[None].astype(np.int32)
+    mult = packed.mult[None]
+    out = serve_step(
+        jnp.asarray(postings), jnp.asarray(cluster_doc), jnp.asarray(mult),
+        max_distance=small_index.max_distance,
+        n_clusters=n_docs, window_len=N, top_k=min(8, n_docs),
+    )
+    top_docs = [int(d) for d in np.asarray(out["top_docs"][0]) if d >= 0]
+    top_scores = np.asarray(out["top_scores"][0])
+
+    # engine ranking for the SAME single subquery
+    from repro.core.combiner import se24_combiner
+    from repro.search.relevance import rank_documents
+
+    results, _ = se24_combiner(sub, small_index)
+    ranked = rank_documents(results, top_k=len(top_docs))
+    exp_docs = [d for d, _, _ in ranked]
+    exp_scores = np.array([s for _, s, _ in ranked])
+
+    k = min(len(exp_docs), len(top_docs))
+    assert top_docs[:k] == exp_docs[:k]
+    np.testing.assert_allclose(top_scores[:k], exp_scores[:k], rtol=1e-5)
+
+
+def test_serve_step_fragment_counts(small_index, lemmatizer):
+    sub = expand_subqueries("who are you who", lemmatizer)[0]
+    packed = pack_subquery_events(sub, small_index, doc_len=128)
+    events = np.argwhere(packed.occ > 0)
+    postings = np.full((1, len(events) + 1, 3), -1, np.int32)
+    for i, (d, l, p) in enumerate(events):
+        postings[0, i] = (d, p, l)
+    out = serve_step(
+        jnp.asarray(postings),
+        jnp.asarray(packed.doc_ids[None].astype(np.int32)),
+        jnp.asarray(packed.mult[None]),
+        max_distance=small_index.max_distance,
+        n_clusters=packed.occ.shape[0], window_len=128, top_k=4,
+    )
+    from repro.core.combiner import se24_combiner
+
+    results, _ = se24_combiner(sub, small_index)
+    assert int(out["n_fragments"][0]) == len(results)

@@ -1,0 +1,64 @@
+"""Vectorized engine == faithful Combiner == Pallas kernel (3-tier equality),
+plus hypothesis properties for the closed-form window cover."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.combiner import se24_combiner
+from repro.core.keys import expand_subqueries
+from repro.core.oracle import sweep_events
+from repro.core.window import window_cover, results_from_cover
+from repro.search.vectorized import VectorizedEngine
+
+QUERIES = ["who are you who", "to be or not to be", "what do you do all day"]
+
+
+@pytest.mark.parametrize("query", QUERIES)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_three_tier_equality(query, use_kernel, small_index, lemmatizer):
+    eng = VectorizedEngine(small_index, use_kernel=use_kernel)
+    for sub in expand_subqueries(query, lemmatizer)[:2]:
+        scalar, _ = se24_combiner(sub, small_index)
+        vec, _ = eng.search_subquery(sub)
+        assert sorted(set(scalar)) == sorted(set(vec))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 4),  # active lemmas
+    st.integers(1, 2),  # max multiplicity
+)
+def test_window_cover_equals_sweep(seed, n_lemmas, max_mult):
+    """Closed-form cover == the §10 sweep, for random occupancy."""
+    rng = np.random.default_rng(seed)
+    N, D = 96, 4
+    occ = (rng.random((n_lemmas, N)) < 0.2).astype(np.int32)
+    mult = rng.integers(1, max_mult + 1, n_lemmas).astype(np.int32)
+    emit, start = window_cover(jnp.asarray(occ), jnp.asarray(mult), window=2 * D + 1)
+    got = set(results_from_cover(0, np.asarray(emit), np.asarray(start)))
+
+    events = sorted(
+        (p, f"l{l}") for l in range(n_lemmas) for p in np.nonzero(occ[l])[0]
+    )
+    mult_map = {f"l{l}": int(mult[l]) for l in range(n_lemmas)}
+    expected = {
+        (0, r.start, r.end)
+        for r in sweep_events(0, events, mult_map, max_span=2 * D)
+    }
+    assert got == expected
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_window_cover_dtype_equivalence(seed):
+    rng = np.random.default_rng(seed)
+    occ = (rng.random((3, 128)) < 0.15).astype(np.uint8)
+    mult = np.array([1, 2, 1], np.int32)
+    e8, s8 = window_cover(jnp.asarray(occ, jnp.uint8), jnp.asarray(mult), 11)
+    e32, s32 = window_cover(jnp.asarray(occ, jnp.int32), jnp.asarray(mult), 11)
+    assert bool(jnp.all(e8 == e32))
+    assert bool(jnp.all(jnp.where(e32, s8, 0) == jnp.where(e32, s32, 0)))
