@@ -140,3 +140,139 @@ def bench_vectorized():
             "results": n_results,
         })
     return out
+
+
+# ---------------------------------------------------------------------------
+# fused batched serving vs the seed per-subquery vectorized path
+# ---------------------------------------------------------------------------
+
+
+def _seed_search_subquery(idx, sub, doc_len=512):
+    """The SEED per-subquery serving path, kept verbatim as the benchmark
+    baseline: dense host-side [B, L, doc_len] occupancy, ONE device call per
+    subquery, per-document Python fragment readout."""
+    import jax.numpy as jnp
+
+    from repro.core.keys import select_keys
+    from repro.core.postings import SearchResult
+    from repro.core.window import results_from_cover
+    from repro.kernels.ops import proximity_search_scores
+
+    keys = select_keys(sub, idx.fl)
+    lemmas = sub.unique_lemmas()
+    lid = {l: i for i, l in enumerate(lemmas)}
+    L = len(lemmas)
+    mult_map = sub.multiplicity()
+    mult = np.array([mult_map[l] for l in lemmas], dtype=np.int32)
+    ev_doc, ev_pos, ev_lem = [], [], []
+    for key in keys:
+        rows = np.asarray(idx.key_postings(key.components))
+        if not len(rows):
+            continue
+        comps, stars = key.components, key.starred
+        for slot in range(len(comps)):
+            if stars[slot]:
+                continue
+            pos = rows[:, 1] if slot == 0 else rows[:, 1] + rows[:, 1 + slot]
+            ev_doc.append(rows[:, 0])
+            ev_pos.append(pos)
+            ev_lem.append(np.full(len(rows), lid[comps[slot]], np.int32))
+    if ev_doc:
+        doc_a = np.concatenate(ev_doc)
+        pos_a = np.concatenate(ev_pos)
+        lem_a = np.concatenate(ev_lem)
+        ok = (pos_a >= 0) & (pos_a < doc_len)
+        doc_a, pos_a, lem_a = doc_a[ok], pos_a[ok], lem_a[ok]
+        docs, doc_idx = np.unique(doc_a, return_inverse=True)
+    else:
+        docs = np.empty((0,), np.int32)
+    b_real = max(1, len(docs))
+    B = 1 << (b_real - 1).bit_length()
+    occ_t = np.zeros((B, L, doc_len), dtype=np.int32)
+    doc_ids = np.full((B,), -1, dtype=np.int32)
+    if len(docs):
+        occ_t[doc_idx, lem_a, pos_a] = 1
+        doc_ids[: len(docs)] = docs
+    mult_b = np.broadcast_to(mult, (B, L))
+    emit, start, _ = proximity_search_scores(
+        jnp.asarray(occ_t), jnp.asarray(mult_b), idx.max_distance
+    )
+    emit_np, start_np = np.asarray(emit), np.asarray(start)
+    results = []
+    for i, doc in enumerate(doc_ids.tolist()):
+        if doc < 0:
+            continue
+        for d, s, e in results_from_cover(doc, emit_np[i], start_np[i]):
+            results.append(SearchResult(doc_id=d, start=s, end=e))
+    return results
+
+
+def bench_serving(n_queries=8, subs_per_query=2, repeats=3):
+    """Old per-subquery serving vs the fused query-at-a-time batch.
+
+    ``n_queries`` multi-subquery queries are served (a) through the seed
+    path — one device dispatch + host readout per subquery — and (b) as ONE
+    fused device program for the whole batch.  Reports steady-state
+    (jit-cached) us per served query.
+    """
+    from repro.search import fused
+
+    store, idx = build_benchmark_index()
+    subs = _stop_lemma_queries(
+        store, idx, n_queries=n_queries * subs_per_query, seed=5
+    )
+    batch = [
+        subs[i * subs_per_query : (i + 1) * subs_per_query]
+        for i in range(n_queries)
+    ]
+    eng = VectorizedEngine(idx)
+
+    # warmup both paths (fixed shape budgets -> steady-state latency)
+    for q in batch:
+        for sub in q:
+            _seed_search_subquery(idx, sub)
+    eng.search_query_batch(batch)
+
+    # best-of-rounds: steady-state serving latency, robust to machine noise
+    seed_rounds = []
+    seed_results = 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        seed_results = 0
+        for q in batch:
+            got = set()
+            for sub in q:
+                got.update(_seed_search_subquery(idx, sub))
+            seed_results += len(got)
+        seed_rounds.append(time.perf_counter() - t0)
+    seed_us = 1e6 * min(seed_rounds) / n_queries
+
+    fused.reset_dispatch_count()
+    fused_rounds = []
+    fused_results = 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res, _ = eng.search_query_batch(batch)
+        fused_results = sum(len(r) for r in res.per_query)
+        fused_rounds.append(time.perf_counter() - t0)
+    fused_us = 1e6 * min(fused_rounds) / n_queries
+
+    return {
+        "n_queries": n_queries,
+        "subs_per_query": subs_per_query,
+        "per_subquery_seed": {"us_per_call": seed_us, "results": seed_results},
+        "fused_batch": {
+            "us_per_call": fused_us,
+            "results": fused_results,
+            "device_dispatches_per_batch": fused.dispatch_count() / repeats,
+        },
+        "speedup": seed_us / max(fused_us, 1e-9),
+    }
+
+
+def bench_serving_results_match(serving: dict) -> bool:
+    """Acceptance guard: both paths must return the same fragment count."""
+    return (
+        serving["per_subquery_seed"]["results"]
+        == serving["fused_batch"]["results"]
+    )

@@ -2,13 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (per harness contract) and a
 human-readable table; roofline sections read the dry-run artifacts.
+``--json`` additionally records the serving comparison (seed per-subquery
+path vs fused query-at-a-time batch) in ``BENCH_serving.json``.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -17,6 +20,8 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 from benchmarks.paper_tables import (  # noqa: E402
     bench_algorithms,
     bench_duplicates,
+    bench_serving,
+    bench_serving_results_match,
     bench_vectorized,
 )
 
@@ -24,6 +29,11 @@ from benchmarks.paper_tables import (  # noqa: E402
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--json",
+        action="store_true",
+        help="write the serving comparison to BENCH_serving.json",
+    )
     args = ap.parse_args()
     n_queries = 10 if args.quick else 30
 
@@ -50,6 +60,24 @@ def main() -> None:
     # ---- vectorized / Pallas engines ---------------------------------------
     for r in bench_vectorized():
         print(f"engine_{r['engine']},{r['avg_ms']*1000:.1f},results={r['results']}")
+
+    # ---- fused batched serving vs seed per-subquery path --------------------
+    serving = bench_serving(repeats=2 if args.quick else 5)
+    for path in ("per_subquery_seed", "fused_batch"):
+        print(f"serving_{path},{serving[path]['us_per_call']:.1f},"
+              f"results={serving[path]['results']}")
+    print(f"serving_speedup,{serving['speedup']:.2f},"
+          f"dispatches_per_batch="
+          f"{serving['fused_batch']['device_dispatches_per_batch']:.0f}")
+    if not bench_serving_results_match(serving):
+        print("serving_results_MISMATCH,0,"
+              f"seed={serving['per_subquery_seed']['results']};"
+              f"fused={serving['fused_batch']['results']}")
+        sys.exit(1)
+    if args.json:
+        out_path = Path(__file__).parent.parent / "BENCH_serving.json"
+        out_path.write_text(json.dumps(serving, indent=2) + "\n")
+        print(f"# wrote {out_path}")
 
     # ---- roofline (from dry-run artifacts, if present) ----------------------
     try:

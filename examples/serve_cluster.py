@@ -1,7 +1,9 @@
 """End-to-end serving driver (the paper's workload is search serving).
 
 Builds a document-sharded index "cluster", serves a batch of mixed queries
-through the Combiner with per-query accounting, compares against the
+through the FUSED device pipeline — every (query, subquery, shard) work item
+packed into ONE device program (scatter -> uint8 cover -> §14 scoring ->
+per-query top-k) — compares against the host Combiner loop and the
 ordinary-index baseline, and runs a dead-shard degradation drill.
 
     PYTHONPATH=src python examples/serve_cluster.py
@@ -10,6 +12,7 @@ ordinary-index baseline, and runs a dead-shard degradation drill.
 import time
 
 from repro.index import synthesize_corpus
+from repro.search import fused
 from repro.search.distributed import ShardedSearchService
 
 QUERIES = [
@@ -27,21 +30,35 @@ store = synthesize_corpus(n_docs=200, doc_len=220, seed=7)
 print(f"corpus: {len(store)} docs; building 8 index shards...")
 t0 = time.perf_counter()
 svc = ShardedSearchService(store, n_shards=8, sw_count=80, fu_count=250,
-                           max_distance=5, algorithm="se2.4")
+                           max_distance=5, algorithm="fused")
 print(f"built in {time.perf_counter() - t0:.1f}s "
       f"(global FL-list broadcast to all shards)\n")
 
-# ---- serve a batch -----------------------------------------------------
-total_ms = total_postings = 0.0
-for q in QUERIES:
-    resp = svc.search(q, top_k=3)
-    total_ms += resp.stats.elapsed_sec * 1000
+# ---- serve the batch: ONE device program for 8 queries x subqueries x 8 shards
+fused.reset_dispatch_count()
+svc.search_batch(QUERIES, top_k=3)  # warm the jit cache (fixed shape budgets)
+fused.reset_dispatch_count()
+t0 = time.perf_counter()
+resps = svc.search_batch(QUERIES, top_k=3)
+batch_ms = (time.perf_counter() - t0) * 1000
+total_postings = 0.0
+for q, resp in zip(QUERIES, resps):
     total_postings += resp.stats.postings_read
     top = ", ".join(f"doc{d.doc_id}:{d.score:.3f}" for d in resp.docs)
-    print(f"  {q!r}: {resp.stats.elapsed_sec*1000:6.1f} ms "
-          f"{resp.stats.postings_read:6d} postings  -> {top}")
-print(f"\nbatch: {total_ms:.0f} ms total, "
+    print(f"  {q!r}: {resp.stats.postings_read:6d} postings  -> {top}")
+print(f"\nfused batch: {batch_ms:.0f} ms total, "
+      f"{fused.dispatch_count()} device dispatch(es) for {len(QUERIES)} queries, "
       f"{total_postings / len(QUERIES):.0f} postings/query average")
+
+# ---- host Combiner loop (the old per-subquery-per-shard serving path) ----
+svc_host = ShardedSearchService(store, n_shards=8, sw_count=80, fu_count=250,
+                                max_distance=5, algorithm="se2.4")
+t0 = time.perf_counter()
+for q in QUERIES:
+    svc_host.search(q, top_k=3)
+host_ms = (time.perf_counter() - t0) * 1000
+print(f"host Combiner loop: {host_ms:.0f} ms total "
+      f"({host_ms / max(batch_ms, 1e-9):.1f}x the fused batch)")
 
 # ---- baseline comparison ------------------------------------------------
 svc_se1 = ShardedSearchService(store, n_shards=8, sw_count=80, fu_count=250,

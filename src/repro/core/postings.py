@@ -41,6 +41,8 @@ class QueryStats:
     intermediate_records: int = 0  # SE2.2/SE2.3 stream materialization
     heap_ops: int = 0
     results: int = 0
+    empty_subqueries: int = 0  # subqueries short-circuited before dispatch
+    device_dispatches: int = 0  # device programs issued for this query/batch
     elapsed_sec: float = 0.0
 
     def merge(self, other: "QueryStats") -> None:
@@ -49,6 +51,8 @@ class QueryStats:
         self.intermediate_records += other.intermediate_records
         self.heap_ops += other.heap_ops
         self.results += other.results
+        self.empty_subqueries += other.empty_subqueries
+        self.device_dispatches += other.device_dispatches
         self.elapsed_sec += other.elapsed_sec
 
 

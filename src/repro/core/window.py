@@ -35,6 +35,7 @@ __all__ = [
     "window_cover_batch",
     "events_to_occupancy",
     "results_from_cover",
+    "results_from_cover_batch",
 ]
 
 
@@ -49,9 +50,11 @@ def window_cover(
     where a minimal fragment ends at ``e``; ``start[e]`` is its start
     position (undefined where ``emit`` is False).
     """
-    # narrow compute dtype (§Perf-3): occupancy and prefix counts fit in u8
-    # for window lengths <= 255, quartering the HBM traffic of the cover loop
-    if occ.dtype in (jnp.uint8, jnp.uint16) and occ.shape[-1] <= jnp.iinfo(occ.dtype).max:
+    # narrow compute dtype (§Perf-3): the cover test only ever looks at
+    # *differences* of prefix counts over one candidate window, so unsigned
+    # wraparound cancels — ``c - cq + oq`` is exact whenever the true window
+    # count (<= window) fits the dtype, regardless of document length.
+    if occ.dtype in (jnp.uint8, jnp.uint16) and window <= jnp.iinfo(occ.dtype).max:
         cdt = occ.dtype
     else:
         cdt = jnp.dtype(jnp.int32)
@@ -93,6 +96,61 @@ def window_cover_batch(
     return jax.vmap(lambda o, m: window_cover(o, m, window))(occ, mult)
 
 
+def window_cover_rank_batch(
+    occ: jax.Array,  # [B, L, N] occupancy (any integer dtype)
+    mult: jax.Array,  # [B, L]
+    window: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Rank-based cover: same (emit, start) as :func:`window_cover_batch`
+    in O(L*N) instead of O(window*L*N).
+
+    ``[q, e]`` covers lemma ``l`` iff ``q <= p_l(e)``, where ``p_l(e)`` is
+    the position of the ``mult[l]``-th latest occurrence of ``l`` at or
+    before ``e``.  So the §10.2 shrink result is closed-form:
+
+        start[e] = min over active l of p_l(e)          (largest covering q)
+        emit[e]  = event(e)  and  e - start[e] < window
+
+    ``p_l(e)`` is one gather: scatter occurrence positions by their prefix
+    rank, then index with ``C[l, e] - mult[l]``.  No per-offset sweep — the
+    window length drops out of the complexity entirely.
+    """
+    b, l, n = occ.shape
+    occ2 = (occ > 0).reshape(b * l, n)
+    mult2 = mult.reshape(b * l, 1).astype(jnp.int32)
+    active = mult2 > 0
+    c = jnp.cumsum(occ2, axis=-1, dtype=jnp.int32)  # exact ranks, no wrap
+
+    # P[row, r] = position of the (r+1)-th occurrence in the row
+    m = b * l
+    pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+    dump = m * n  # padding slot for non-occurrence lanes
+    flat_rank = jnp.where(
+        occ2, jnp.arange(m, dtype=jnp.int32)[:, None] * n + (c - 1), dump
+    )
+    p_table = (
+        jnp.full((m * n + 1,), -1, jnp.int32)
+        .at[flat_rank.reshape(-1)]
+        .set(jnp.broadcast_to(pos, (m, n)).reshape(-1))
+    )
+
+    idx = c - mult2  # rank of the mult-th latest occurrence at/before e
+    valid = (idx >= 0) | ~active
+    gather_idx = jnp.arange(m, dtype=jnp.int32)[:, None] * n + jnp.maximum(idx, 0)
+    p_le = p_table[gather_idx]  # [M, N]
+    p_le = jnp.where(active & (idx >= 0), p_le, n)  # inactive -> +inf for min
+
+    p_b = p_le.reshape(b, l, n)
+    start = jnp.min(p_b, axis=1)  # [B, N] largest covering q
+    all_valid = jnp.all(valid.reshape(b, l, n), axis=1)
+    is_event = jnp.any(occ2.reshape(b, l, n) & active.reshape(b, l, 1), axis=1)
+    e_pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+    emit = is_event & all_valid & (start < n) & (e_pos - start < window)
+    # match window_cover's convention: start defaults to e where no cover
+    start = jnp.where(emit, start, e_pos)
+    return emit, start
+
+
 def events_to_occupancy(
     events_pos: np.ndarray,  # [E] positions (pad = -1)
     events_lem: np.ndarray,  # [E] local lemma ids
@@ -113,3 +171,22 @@ def results_from_cover(
     ends = np.nonzero(np.asarray(emit))[0]
     starts = np.asarray(start)[ends]
     return [(doc_id, int(s), int(e)) for s, e in zip(starts, ends)]
+
+
+def results_from_cover_batch(
+    doc_ids: np.ndarray,  # [B] global doc id per row (pad = -1)
+    emit: np.ndarray,  # [B, N] emission mask
+    start: np.ndarray,  # [B, N] fragment starts
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized fragment readout over a whole emit batch.
+
+    One ``np.nonzero`` replaces the per-document Python loop: returns
+    ``(rows, docs, starts, ends)`` — ``rows`` is the batch row of each
+    fragment (callers map rows back to queries/segments), the other three
+    are the fragment triples.  Padding rows (``doc_ids < 0``) emit nothing.
+    """
+    doc_ids = np.asarray(doc_ids)
+    emit = np.asarray(emit)
+    rows, ends = np.nonzero(emit & (doc_ids >= 0)[:, None])
+    starts = np.asarray(start)[rows, ends]
+    return rows, doc_ids[rows], starts.astype(np.int64), ends

@@ -33,18 +33,29 @@ __all__ = [
 ]
 
 
-@functools.partial(jax.jit, static_argnames=("max_distance", "use_kernel", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_distance", "use_kernel", "interpret", "compute_dtype"),
+)
 def proximity_search_scores(
     occ: jax.Array,  # [B, L, N] occupancy per candidate window
     mult: jax.Array,  # [B, L]
     max_distance: int,
     use_kernel: bool = False,
     interpret: bool = True,
+    compute_dtype: str = "int32",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Fused cover + §14 relevance: returns (emit, start, scores[B])."""
+    """Fused cover + §14 relevance: returns (emit, start, scores[B]).
+
+    ``compute_dtype`` narrows the occupancy/prefix-count rows (kernel and jnp
+    ref agree — §Perf-3); int32 reproduces the historical behaviour exactly.
+    """
+    cdt = jnp.dtype(compute_dtype)
     if use_kernel:
-        emit, start = proximity_window(occ, mult, max_distance, interpret=interpret)
+        emit, start = proximity_window(
+            occ, mult, max_distance, interpret=interpret, compute_dtype=compute_dtype
+        )
     else:
-        emit, start = proximity_window_ref(occ, mult, max_distance)
+        emit, start = proximity_window_ref(occ.astype(cdt), mult, max_distance)
     scores = fragment_scores_ref(emit, start)
     return emit, start, scores

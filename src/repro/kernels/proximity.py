@@ -37,8 +37,8 @@ def _shift_right(x: jax.Array, o: int) -> jax.Array:
 
 
 def proximity_window_kernel(
-    occ_ref,  # [1, L, N] int32
-    mult_ref,  # [1, L] int32
+    occ_ref,  # [1, L, N] compute-dtype occupancy
+    mult_ref,  # [1, L] compute-dtype
     emit_ref,  # [1, N] int32 out
     start_ref,  # [1, N] int32 out
     *,
@@ -48,7 +48,10 @@ def proximity_window_kernel(
     mult = mult_ref[0]  # [L]
     L, n = occ.shape
 
-    # prefix counts via doubling shifts (log2 N steps, VPU adds)
+    # prefix counts via doubling shifts (log2 N steps, VPU adds).  In a
+    # narrow unsigned dtype the running count wraps, but the cover test only
+    # reads window *differences* (`c - cq + oq` <= window), so wraparound
+    # cancels exactly — same invariant as core/window.py's ref (§Perf-3).
     c = occ
     k = 1
     while k < n:
@@ -74,20 +77,30 @@ def proximity_window_kernel(
     start_ref[0] = pos - o_star
 
 
-@functools.partial(jax.jit, static_argnames=("max_distance", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("max_distance", "interpret", "compute_dtype")
+)
 def proximity_window(
-    occ: jax.Array,  # [B, L, N] int32
+    occ: jax.Array,  # [B, L, N] occupancy (any integer dtype)
     mult: jax.Array,  # [B, L] int32
     max_distance: int,
     interpret: bool = True,
+    compute_dtype: str = "int32",
 ) -> tuple[jax.Array, jax.Array]:
     """Batched minimal-fragment cover via ``pl.pallas_call``.
 
     Returns ``(emit bool [B, N], start int32 [B, N])`` — identical semantics
-    to ``kernels.ref.proximity_window_ref``.
+    to ``kernels.ref.proximity_window_ref``.  ``compute_dtype`` narrows the
+    occupancy rows held in VMEM (uint8 quarters the HBM stream per doc, see
+    DESIGN.md §2); it must fit the window length, like the jnp ref.
     """
     b, l, n = occ.shape
     window = 2 * max_distance + 1
+    cdt = jnp.dtype(compute_dtype)
+    if cdt != jnp.int32 and window > jnp.iinfo(cdt).max:
+        raise ValueError(
+            f"compute_dtype {compute_dtype} cannot hold window counts up to {window}"
+        )
     kernel = functools.partial(proximity_window_kernel, window=window)
     emit, start = pl.pallas_call(
         kernel,
@@ -105,5 +118,5 @@ def proximity_window(
             jax.ShapeDtypeStruct((b, n), jnp.int32),
         ],
         interpret=interpret,
-    )(occ.astype(jnp.int32), mult.astype(jnp.int32))
+    )(occ.astype(cdt), mult.astype(cdt))
     return emit.astype(jnp.bool_), start

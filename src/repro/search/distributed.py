@@ -31,6 +31,7 @@ from ..core.postings import QueryStats, SearchResult
 from ..index.builder import IndexSet, build_indexes
 from ..index.corpus import DocumentStore
 from ..search.engine import ALGORITHMS, QueryResponse, RankedDoc
+from ..search.fused import empty_batch_result, plan_query_batch, run_query_batch
 from ..search.relevance import rank_documents
 
 __all__ = ["ShardedSearchService", "shard_documents", "device_topk_merge"]
@@ -68,10 +69,15 @@ class ShardedSearchService:
         fu_count: int,
         max_distance: int = 5,
         algorithm: str = "se2.4",
+        use_kernel: bool = False,
+        doc_len: int = 512,
     ):
         from ..core.lemma import FLList
 
         self.algorithm = algorithm
+        self.use_kernel = use_kernel
+        self.doc_len = doc_len
+        self.max_distance = max_distance
         self.n_shards = n_shards
         global_freq = store.lemma_frequencies()
         self.fl = FLList.from_frequencies(global_freq, sw_count=sw_count, fu_count=fu_count)
@@ -93,18 +99,57 @@ class ShardedSearchService:
         gracefully (documents on dead shards are simply absent — production
         re-replicates them from the document store at the next epoch).
         """
+        return self.search_batch([query], top_k=top_k, dead_shards=dead_shards)[0]
+
+    def search_batch(
+        self,
+        queries: Sequence[str],
+        top_k: int = 10,
+        dead_shards: Sequence[int] = (),
+    ) -> list[QueryResponse]:
+        """Serve a query batch across all live shards.
+
+        With ``algorithm="fused"`` the full (query x subquery x shard) work
+        cross product packs into ONE device program (``search/fused.py``) —
+        the fan-out that used to be a Python triple loop of host Combiner
+        calls.  Host algorithms keep the per-subquery loop.
+        """
         import time
 
         from ..core.keys import expand_subqueries
 
         t0 = time.perf_counter()
+        per_query_subs = [expand_subqueries(q, self.lemmatizer) for q in queries]
+        live = [
+            idx
+            for shard_id, idx in enumerate(self.shards)
+            if shard_id not in dead_shards
+        ]
+        if self.algorithm == "fused":
+            responses = self._search_batch_fused(
+                queries, per_query_subs, live, top_k, t0
+            )
+        else:
+            responses = [
+                self._search_host(q, subs, live, top_k)
+                for q, subs in zip(queries, per_query_subs)
+            ]
+        return responses
+
+    def _search_host(
+        self,
+        query: str,
+        subqueries: Sequence[Subquery],
+        live: Sequence[IndexSet],
+        top_k: int,
+    ) -> QueryResponse:
+        import time
+
+        t0 = time.perf_counter()
         fn = ALGORITHMS[self.algorithm]
         total = QueryStats()
         all_results: set[SearchResult] = set()
-        subqueries = expand_subqueries(query, self.lemmatizer)
-        for shard_id, idx in enumerate(self.shards):
-            if shard_id in dead_shards:
-                continue
+        for idx in live:
             for sub in subqueries:
                 results, stats = fn(sub, idx)
                 total.merge(stats)
@@ -117,6 +162,54 @@ class ShardedSearchService:
         total.elapsed_sec = time.perf_counter() - t0
         return QueryResponse(query=query, docs=docs, stats=total,
                              n_subqueries=len(subqueries))
+
+    def _search_batch_fused(
+        self,
+        queries: Sequence[str],
+        per_query_subs: Sequence[Sequence[Subquery]],
+        live: Sequence[IndexSet],
+        top_k: int,
+        t0: float,
+    ) -> list[QueryResponse]:
+        import time
+
+        # segments = the (subquery x live shard) cross product per query;
+        # doc ids are global, so shards just contribute disjoint candidates
+        work = [
+            [(sub, idx) for idx in live for sub in subs]
+            for subs in per_query_subs
+        ]
+        per_stats = [QueryStats() for _ in queries]
+        plan = plan_query_batch(work, doc_len=self.doc_len, stats=per_stats)
+        if plan is None:
+            result = empty_batch_result(len(queries), top_k)
+        else:
+            batch_stats = QueryStats()
+            result = run_query_batch(
+                plan,
+                max_distance=self.max_distance,
+                top_k=top_k,
+                use_kernel=self.use_kernel,
+                stats=batch_stats,
+            )
+            for st in per_stats:
+                st.device_dispatches = batch_stats.device_dispatches
+        elapsed = time.perf_counter() - t0
+        responses = []
+        for qi, query in enumerate(queries):
+            fragments = result.per_query[qi]
+            docs = [
+                RankedDoc(doc_id=d, score=s, fragments=f)
+                for d, s, f in rank_documents(fragments, top_k=top_k)
+            ]
+            st = per_stats[qi]
+            st.results = len(fragments)
+            st.elapsed_sec = elapsed  # batch wall time (one shared dispatch)
+            responses.append(
+                QueryResponse(query=query, docs=docs, stats=st,
+                              n_subqueries=len(per_query_subs[qi]))
+            )
+        return responses
 
 
 # ---------------------------------------------------------------------------

@@ -4,13 +4,17 @@
 2) Building subqueries      — cartesian product over lemma alternatives.
 3) Processing subqueries    — key selection + one of the §4 algorithms.
 4) Combining results        — union of fragments, §14 proximity relevance.
+
+The host algorithms (``se1`` .. ``se2.4``) run one subquery at a time; the
+``fused`` algorithm routes the whole query — and, through ``search_batch``, a
+whole query *batch* — into one device program (``search/fused.py``).
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Literal
+from typing import Callable, Literal, Sequence
 
 from ..core.baselines import (
     se1_ordinary,
@@ -27,7 +31,7 @@ from .relevance import rank_documents
 
 __all__ = ["SearchEngine", "RankedDoc", "QueryResponse", "ALGORITHMS"]
 
-Algorithm = Literal["se1", "se2.1", "se2.2", "se2.3", "se2.4"]
+Algorithm = Literal["se1", "se2.1", "se2.2", "se2.3", "se2.4", "fused"]
 
 ALGORITHMS: dict[str, Callable[[Subquery, IndexSet], tuple[list[SearchResult], QueryStats]]] = {
     "se1": se1_ordinary,
@@ -62,12 +66,46 @@ class SearchEngine:
         index: IndexSet,
         lemmatizer: Lemmatizer | None = None,
         algorithm: Algorithm = "se2.4",
+        use_kernel: bool = False,
+        doc_len: int = 512,
     ):
+        if algorithm != "fused" and algorithm not in ALGORITHMS:
+            raise KeyError(algorithm)
         self.index = index
         self.lemmatizer = lemmatizer or Lemmatizer()
         self.algorithm = algorithm
+        self.use_kernel = use_kernel
+        self.doc_len = doc_len
+        self._vec = None
+
+    def _vectorized(self):
+        if self._vec is None:
+            from .vectorized import VectorizedEngine
+
+            self._vec = VectorizedEngine(
+                self.index, use_kernel=self.use_kernel, doc_len=self.doc_len
+            )
+        return self._vec
 
     def search(self, query: str, top_k: int = 10) -> QueryResponse:
+        return self.search_batch([query], top_k=top_k)[0]
+
+    def search_batch(
+        self, queries: Sequence[str], top_k: int = 10
+    ) -> list[QueryResponse]:
+        """Serve a batch of queries.
+
+        With ``algorithm="fused"`` the whole batch — every subquery of every
+        query — is one device dispatch; host algorithms fall back to the
+        per-subquery loop.
+        """
+        if self.algorithm == "fused":
+            return self._search_batch_fused(queries, top_k)
+        return [self._search_host(q, top_k) for q in queries]
+
+    # ---- host per-subquery path -------------------------------------------
+
+    def _search_host(self, query: str, top_k: int) -> QueryResponse:
         t0 = time.perf_counter()
         fn = ALGORITHMS[self.algorithm]
         subqueries = expand_subqueries(query, self.lemmatizer)
@@ -86,3 +124,34 @@ class SearchEngine:
         return QueryResponse(
             query=query, docs=ranked, stats=total, n_subqueries=len(subqueries)
         )
+
+    # ---- fused batched path ------------------------------------------------
+
+    def _search_batch_fused(
+        self, queries: Sequence[str], top_k: int
+    ) -> list[QueryResponse]:
+        t0 = time.perf_counter()
+        per_query_subs = [expand_subqueries(q, self.lemmatizer) for q in queries]
+        per_stats = [QueryStats() for _ in queries]
+        result, _ = self._vectorized().search_query_batch(
+            per_query_subs, top_k=top_k, per_query_stats=per_stats
+        )
+        elapsed = time.perf_counter() - t0
+        responses = []
+        for qi, query in enumerate(queries):
+            docs = [
+                RankedDoc(doc_id=d, score=s, fragments=f)
+                for d, s, f in rank_documents(result.per_query[qi], top_k=top_k)
+            ]
+            qstats = per_stats[qi]
+            qstats.results = len(result.per_query[qi])
+            qstats.elapsed_sec = elapsed  # batch wall time (shared dispatch)
+            responses.append(
+                QueryResponse(
+                    query=query,
+                    docs=docs,
+                    stats=qstats,
+                    n_subqueries=len(per_query_subs[qi]),
+                )
+            )
+        return responses

@@ -1,0 +1,626 @@
+"""Fused, batched, query-at-a-time serving pipeline (DESIGN.md §9).
+
+The serving unit is a *query batch*.  Every (query, subquery, shard) work
+item becomes one fixed-shape **segment** of compact event triples
+``(doc_slot, pos, lemma)`` — no dense host-side occupancy.  Candidate
+(segment, doc) pairs share one global row axis R, packed densely, and a
+single jit'd device program runs, for all segments of all queries at once:
+
+    per-event rank cover  ->  §14 scoring  ->  per-query top-k
+
+The cover is the *event-centric* form of the rank identity behind
+``core.window.window_cover_rank_batch``: a fragment ending at event position
+``e`` starts at ``min over lemmas l of p_l(e)``, the position of the
+``mult[l]``-th latest occurrence of ``l`` at or before ``e``.  The device
+gathers ``p_l(e)`` from per-(row, lemma) occurrence-position tables, so the
+work is O(events) — proportional to real occurrences, like the paper's
+Combiner — instead of O(rows * positions) dense occupancy sweeps.  With
+``use_kernel=True`` the cover instead scatters occupancy on-device and runs
+the Pallas window kernel (the TPU-native dense layout), gathering back to
+event granularity; both paths produce identical fragments.
+
+Fragments are read out with one ``np.nonzero`` over the whole event batch
+instead of a per-document Python loop.  All shape budgets (events E, rows R,
+lemmas L, table depth K, queries Q) are bucketed to powers of two so the
+number of distinct compiled programs stays logarithmic in the workload
+spread (DESIGN.md §9.2).
+
+Candidate selection for multi-key subqueries additionally runs the
+Combiner's Step-1 document alignment as a *pre-filter* over sorted doc-id
+lists (``kernels/intersect.py``), and Step 2's counting gate drops candidate
+documents that cannot meet any lemma's multiplicity — only surviving
+documents enter the row budget.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.keys import SelectedKey, Subquery, select_keys
+from ..core.postings import QueryStats, SearchResult
+from ..index.builder import IndexSet
+from ..kernels.intersect import PAD, block_offsets, intersect_sorted
+from ..kernels.proximity import proximity_window
+
+__all__ = [
+    "SegmentEvents",
+    "QueryBatchPlan",
+    "FusedBatchResult",
+    "bucket_pow2",
+    "extract_segment_events",
+    "intersect_candidates",
+    "plan_query_batch",
+    "fused_serve_batch",
+    "run_query_batch",
+    "dispatch_count",
+    "reset_dispatch_count",
+]
+
+# Default list size above which the Step-1 pre-filter pays for a device
+# round-trip; below it the same block intersection runs as host searchsorted.
+INTERSECT_DEVICE_THRESHOLD = 4096
+
+_DISPATCHES = 0
+
+
+def dispatch_count() -> int:
+    """Device programs issued by this module since the last reset (tests
+    count these to assert one-dispatch-per-query-batch serving)."""
+    return _DISPATCHES
+
+
+def reset_dispatch_count() -> None:
+    global _DISPATCHES
+    _DISPATCHES = 0
+
+
+def bucket_pow2(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= max(n, lo) — the jit-cache shape budget."""
+    n = max(n, lo)
+    return 1 << (n - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# compact event transport (host side)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SegmentEvents:
+    """Compact event transport for one (subquery, shard) work item.
+
+    Events are deduplicated and sorted by (doc, pos, lemma).  ``rank`` is the
+    event's occurrence index within its (doc, lemma) group — the row of the
+    per-(row, lemma) position table it fills; ``primary`` marks the first
+    event at each (doc, pos) so positionwise quantities (scores, fragment
+    counts) are not double-counted for multi-lemma positions.
+    """
+
+    doc_ids: np.ndarray  # [Bd] sorted unique candidate doc ids
+    slot: np.ndarray  # [E] int32 index into doc_ids
+    pos: np.ndarray  # [E] int32 document position
+    lem: np.ndarray  # [E] int32 local lemma id
+    rank: np.ndarray  # [E] int32 occurrence index within (doc, lemma)
+    primary: np.ndarray  # [E] bool first event of its (doc, pos)
+    mult: np.ndarray  # [L] int32 required multiplicity per local lemma
+    lemmas: list[str]  # local lemma id -> lemma
+
+
+def _device_intersect(
+    a: np.ndarray, b: np.ndarray, block_a: int = 128, block_b: int = 256
+) -> np.ndarray:
+    """Membership mask of sorted-unique ``a`` in sorted-unique ``b`` via the
+    Pallas block-intersection kernel (scalar-prefetched offsets)."""
+    global _DISPATCHES
+    na = bucket_pow2(len(a), block_a)
+    nb = bucket_pow2(len(b), block_b)
+    a_p = np.full((na,), PAD, np.int32)
+    a_p[: len(a)] = a
+    b_p = np.full((nb,), PAD, np.int32)
+    b_p[: len(b)] = b
+    offsets = block_offsets(a_p, b_p, block_a, block_b)
+    # size the chunk sweep from data statistics: matches of a real a-block
+    # end before searchsorted(b, block_last, right)
+    n_blocks = na // block_a
+    last_idx = np.minimum(np.arange(1, n_blocks + 1) * block_a - 1, len(a) - 1)
+    ends = np.searchsorted(b_p[: len(b)], a_p[last_idx], side="right")
+    span = np.maximum(ends - offsets, 1)
+    n_chunks = bucket_pow2(int(np.ceil(span.max() / block_b)))
+    hit = np.asarray(
+        intersect_sorted(
+            jnp.asarray(a_p),
+            jnp.asarray(b_p),
+            jnp.asarray(offsets),
+            block_a=block_a,
+            block_b=block_b,
+            n_chunks=n_chunks,
+        )
+    )
+    _DISPATCHES += 1
+    return hit[: len(a)] > 0
+
+
+def intersect_candidates(
+    doc_lists: Sequence[np.ndarray],
+    device_threshold: int = INTERSECT_DEVICE_THRESHOLD,
+) -> np.ndarray:
+    """Sorted-unique doc-list intersection across a subquery's keys — the
+    Combiner's Step-1 document alignment, run once as a batch pre-filter.
+
+    Lists at or above ``device_threshold`` go through the Pallas block
+    intersection (``kernels/intersect.py``); smaller ones use the identical
+    host form (searchsorted) where a device round-trip would not pay off.
+    """
+    lists = sorted((np.asarray(d) for d in doc_lists), key=len)
+    acc = lists[0]
+    for other in lists[1:]:
+        if not len(acc):
+            return acc
+        if min(len(acc), len(other)) >= device_threshold:
+            hit = _device_intersect(acc, other)
+        else:
+            i = np.minimum(np.searchsorted(other, acc), len(other) - 1)
+            hit = other[i] == acc
+        acc = acc[hit]
+    return acc
+
+
+def extract_segment_events(
+    subquery: Subquery,
+    index: IndexSet,
+    keys: Sequence[SelectedKey] | None = None,
+    doc_len: int = 512,
+    stats: QueryStats | None = None,
+    intersect_device_threshold: int = INTERSECT_DEVICE_THRESHOLD,
+) -> SegmentEvents | None:
+    """Key postings -> compact (doc_slot, pos, lemma) event triples.
+
+    Returns ``None`` for an empty subquery (no key events, or the Step-1
+    candidate intersection is empty) so callers short-circuit instead of
+    dispatching an all-padding batch; the skip is counted in
+    ``QueryStats.empty_subqueries``.
+    """
+    keys = list(keys) if keys is not None else select_keys(subquery, index.fl)
+    lemmas = subquery.unique_lemmas()
+    lid = {l: i for i, l in enumerate(lemmas)}
+    mult_map = subquery.multiplicity()
+    mult = np.array([mult_map[l] for l in lemmas], dtype=np.int32)
+
+    # vectorized event extraction: one (doc, pos, lemma) column set per
+    # unstarred key slot — no per-posting Python work
+    ev_doc, ev_pos, ev_lem = [], [], []
+    key_docs: list[np.ndarray] = []
+    for key in keys:
+        rows = np.asarray(index.key_postings(key.components))
+        if stats is not None:
+            stats.postings_read += len(rows)
+            stats.bytes_read += rows.nbytes
+        key_docs.append(
+            np.unique(rows[:, 0]) if len(rows) else np.empty((0,), np.int32)
+        )
+        if not len(rows):
+            continue
+        comps, stars = key.components, key.starred
+        for slot in range(len(comps)):
+            if stars[slot]:
+                continue
+            pos = rows[:, 1] if slot == 0 else rows[:, 1] + rows[:, 1 + slot]
+            ev_doc.append(rows[:, 0])
+            ev_pos.append(pos)
+            ev_lem.append(np.full(len(rows), lid[comps[slot]], np.int32))
+
+    if not ev_doc:
+        if stats is not None:
+            stats.empty_subqueries += 1
+        return None
+    doc_a = np.concatenate(ev_doc)
+    pos_a = np.concatenate(ev_pos)
+    lem_a = np.concatenate(ev_lem)
+    ok = pos_a >= 0
+    doc_a, pos_a, lem_a = doc_a[ok], pos_a[ok], lem_a[ok]
+    if len(pos_a):
+        # the position modulus must cover every real position: documents
+        # longer than the caller's doc_len hint must not lose fragments
+        doc_len = max(doc_len, int(pos_a.max()) + 1)
+
+    # Step-1 pre-filter: a fragment needs every key iterator on the document
+    if len(key_docs) >= 2:
+        cand = intersect_candidates(key_docs, device_threshold=intersect_device_threshold)
+        if len(cand) and len(doc_a):
+            i = np.minimum(np.searchsorted(cand, doc_a), len(cand) - 1)
+            keep = cand[i] == doc_a
+            doc_a, pos_a, lem_a = doc_a[keep], pos_a[keep], lem_a[keep]
+        else:
+            doc_a = doc_a[:0]
+
+    if not len(doc_a):
+        if stats is not None:
+            stats.empty_subqueries += 1
+        return None
+
+    # dedup events (occupancy semantics: one event per (doc, pos, lemma))
+    # and run Step 2's counting gate batched: a candidate doc whose distinct
+    # positions of some lemma fall short of its multiplicity can never emit
+    # a fragment — drop its rows before the device budget.
+    n_lem = len(lemmas)
+    comp = (doc_a.astype(np.int64) * doc_len + pos_a) * n_lem + lem_a
+    comp = np.unique(comp)  # sorted by (doc, pos, lemma)
+    lem_a = (comp % n_lem).astype(np.int32)
+    pos_a = ((comp // n_lem) % doc_len).astype(np.int32)
+    doc_a = (comp // (n_lem * doc_len)).astype(np.int32)
+    docs, slot = np.unique(doc_a, return_inverse=True)
+    counts = np.bincount(
+        slot * n_lem + lem_a, minlength=len(docs) * n_lem
+    ).reshape(len(docs), n_lem)
+    ok_doc = (counts >= mult[None, :]).all(axis=1)
+    if not ok_doc.all():
+        keep = ok_doc[slot]
+        doc_a, pos_a, lem_a = doc_a[keep], pos_a[keep], lem_a[keep]
+        if not len(doc_a):
+            if stats is not None:
+                stats.empty_subqueries += 1
+            return None
+        docs, slot = np.unique(doc_a, return_inverse=True)
+
+    # occurrence rank within (doc, lemma) + primary flag per (doc, pos)
+    order = np.lexsort((pos_a, lem_a, slot))
+    grp = slot[order].astype(np.int64) * n_lem + lem_a[order]
+    new_grp = np.r_[True, grp[1:] != grp[:-1]]
+    grp_start = np.maximum.accumulate(
+        np.where(new_grp, np.arange(len(order)), 0)
+    )
+    rank = np.empty(len(order), np.int32)
+    rank[order] = (np.arange(len(order)) - grp_start).astype(np.int32)
+    pos_key = slot.astype(np.int64) * doc_len + pos_a
+    primary = np.r_[True, pos_key[1:] != pos_key[:-1]]
+
+    return SegmentEvents(
+        doc_ids=docs.astype(np.int32),
+        slot=slot.astype(np.int32),
+        pos=pos_a.astype(np.int32),
+        lem=lem_a.astype(np.int32),
+        rank=rank,
+        primary=primary,
+        mult=mult,
+        lemmas=lemmas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# query-batch plan (bucketed, padded, fixed-shape)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QueryBatchPlan:
+    """Fixed-shape tensors for one fused device dispatch.
+
+    The batch is packed *row-major*: every (segment, candidate-doc) pair of
+    every query occupies one row of a single global row axis ``R`` — no
+    per-segment doc-slot padding, so total device work tracks the real
+    candidate count, not ``segments x max(docs per segment)``.  ``postab``
+    is the per-(row, lemma) occurrence-position table the event-centric
+    cover gathers from (pad = ``doc_len``, which compares greater than every
+    real position).  Padding rows have ``row_doc = -1`` / ``row_query = -1``
+    / ``mult = 0`` and provably emit nothing.
+    """
+
+    events: np.ndarray  # [E, 3] int32 (row, pos, lemma), pad = -1
+    primary: np.ndarray  # [E] int8 first-event-of-(row, pos) flag
+    postab: np.ndarray  # [R, L, K] int32 k-th occurrence position, pad = doc_len
+    row_doc: np.ndarray  # [R] int32 global doc id per row, pad = -1
+    row_query: np.ndarray  # [R] int32 query index per row, pad = -1
+    mult: np.ndarray  # [R, L] int32 (0 = unused lemma slot)
+    n_queries: int  # live queries (<= query_budget)
+    query_budget: int  # bucket_pow2(n_queries), static in the device program
+    doc_len: int  # bucketed window budget (<= the caller's doc_len cap)
+
+
+def plan_query_batch(
+    work: Sequence[Sequence[tuple[Subquery, IndexSet]]],
+    doc_len: int = 512,
+    stats: QueryStats | Sequence[QueryStats] | None = None,
+    intersect_device_threshold: int = INTERSECT_DEVICE_THRESHOLD,
+) -> QueryBatchPlan | None:
+    """Pack a query batch into one device program's inputs.
+
+    ``work[qi]`` lists query ``qi``'s (subquery, index-shard) items — the
+    cross product the per-subquery serving loops used to dispatch one call
+    each for.  ``stats`` is one accumulator for the batch or one per query.
+    Returns ``None`` when every item is empty (nothing to dispatch).
+    """
+    def stat_for(qi: int) -> QueryStats | None:
+        if stats is None or isinstance(stats, QueryStats):
+            return stats
+        return stats[qi]
+
+    segs: list[tuple[int, SegmentEvents]] = []
+    for qi, items in enumerate(work):
+        for sub, index in items:
+            se = extract_segment_events(
+                sub,
+                index,
+                doc_len=doc_len,
+                stats=stat_for(qi),
+                intersect_device_threshold=intersect_device_threshold,
+            )
+            if se is not None:
+                segs.append((qi, se))
+    if not segs:
+        return None
+
+    n_rows = sum(len(se.doc_ids) for _, se in segs)
+    n_events = sum(len(se.slot) for _, se in segs)
+    r_budget = bucket_pow2(n_rows, lo=8)
+    e_budget = bucket_pow2(n_events, lo=64)
+    l_budget = bucket_pow2(max(len(se.lemmas) for _, se in segs), lo=2)
+    k_budget = bucket_pow2(max(int(se.rank.max()) for _, se in segs) + 1, lo=4)
+    # position budget: bucketed from the last real event, NOT clamped to the
+    # caller's doc_len hint — long documents keep their fragments (the event
+    # path's cost barely depends on it; only the dense kernel path scatters
+    # [R, L, N] occupancy)
+    max_pos = max(int(se.pos.max()) for _, se in segs)
+    n_budget = bucket_pow2(max_pos + 1, lo=64)
+
+    events = np.full((e_budget, 3), -1, np.int32)
+    primary = np.zeros((e_budget,), np.int8)
+    postab = np.full((r_budget, l_budget, k_budget), n_budget, np.int32)
+    row_doc = np.full((r_budget,), -1, np.int32)
+    row_query = np.full((r_budget,), -1, np.int32)
+    mult = np.zeros((r_budget, l_budget), np.int32)
+    row = ev = 0
+    for qi, se in segs:
+        nd, ne = len(se.doc_ids), len(se.slot)
+        events[ev : ev + ne, 0] = se.slot + row
+        events[ev : ev + ne, 1] = se.pos
+        events[ev : ev + ne, 2] = se.lem
+        primary[ev : ev + ne] = se.primary
+        postab[se.slot + row, se.lem, se.rank] = se.pos
+        row_doc[row : row + nd] = se.doc_ids
+        row_query[row : row + nd] = qi
+        mult[row : row + nd, : len(se.mult)] = se.mult
+        row += nd
+        ev += ne
+    return QueryBatchPlan(
+        events=events,
+        primary=primary,
+        postab=postab,
+        row_doc=row_doc,
+        row_query=row_query,
+        mult=mult,
+        n_queries=len(work),
+        query_budget=bucket_pow2(len(work)),
+        doc_len=n_budget,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the fused device program
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "max_distance",
+        "query_budget",
+        "window_len",
+        "top_k",
+        "compute_dtype",
+        "use_kernel",
+        "interpret",
+    ),
+)
+def fused_serve_batch(
+    events: jax.Array,  # [E, 3] int32 (row, pos, lemma), pad = -1
+    primary: jax.Array,  # [E] int8 first-event-of-(row, pos) flag
+    postab: jax.Array,  # [R, L, K] int32 occurrence positions, pad = window_len
+    row_doc: jax.Array,  # [R] int32 global doc id per row, pad = -1
+    row_query: jax.Array,  # [R] int32 query index per row, pad = -1
+    mult: jax.Array,  # [R, L] int32
+    *,
+    max_distance: int,
+    query_budget: int,
+    window_len: int,
+    top_k: int = 16,
+    compute_dtype: str = "uint8",  # §Perf-3: dense-path occupancy fits u8
+    use_kernel: bool = False,
+    interpret: bool = True,
+):
+    """One device program for a whole query batch.
+
+    stage 1  per-event rank cover: for every event, gather the mult-th
+             latest occurrence position of every lemma from ``postab`` —
+             fragment start = min over active lemmas, emit iff the span
+             fits ``2 * max_distance`` (O(events), no dense occupancy);
+             with ``use_kernel=True``: scatter occupancy [R, L, N] on-device
+             instead and run the Pallas window kernel, then gather emit and
+             start back to event granularity;
+    stage 2  §14 relevance per row (scatter-add of per-event contributions);
+    stage 3  per-query top-k via a [Q, R] masked selection over row scores.
+
+    ``top_docs`` is row-level: a document reachable through two subqueries
+    of the same query occupies two rows and its duplicate fragments are not
+    deduplicated on device — exact ranking uses the fragment readout
+    (DESIGN.md §9.3).
+    """
+    r, l, k = postab.shape
+    n = window_len
+    q = query_budget
+    window = 2 * max_distance + 1
+
+    row = events[..., 0]
+    pos = events[..., 1]
+    lem = events[..., 2]
+    ok = (row >= 0) & (row < r) & (pos >= 0) & (pos < n) & (lem >= 0) & (lem < l)
+    row_s = jnp.clip(row, 0, r - 1)
+
+    if use_kernel:
+        # ---- dense path: on-device scatter + Pallas window kernel ---------
+        cdt = jnp.dtype(compute_dtype)
+        flat = (row_s * l + jnp.maximum(lem, 0)) * n + jnp.maximum(pos, 0)
+        occ = jnp.zeros((r * l * n,), cdt).at[flat].max(ok.astype(cdt))
+        occ = occ.reshape(r, l, n)
+        emit_rn, start_rn = proximity_window(
+            occ, mult, max_distance, interpret=interpret, compute_dtype=compute_dtype
+        )
+        pos_s = jnp.clip(pos, 0, n - 1)
+        emit = ok & emit_rn[row_s, pos_s]
+        start = start_rn[row_s, pos_s]
+    else:
+        # ---- event-centric rank cover -------------------------------------
+        tab = postab[row_s]  # [E, L, K]
+        mrow = mult[row_s]  # [E, L]
+        active = mrow > 0
+        # C_l(pos): occurrences of lemma l at/before this event's position.
+        # postab rows are position-sorted, so this is a log2(K)-step binary
+        # search per (event, lemma) instead of a K-wide compare-reduce.
+        cnt = jnp.zeros(tab.shape[:2], jnp.int32)  # [E, L]
+        step = k
+        while step > 1:
+            step //= 2
+            probe = jnp.take_along_axis(
+                tab, jnp.minimum(cnt + step - 1, k - 1)[..., None], axis=-1
+            )[..., 0]
+            cnt = jnp.where(probe <= pos[:, None], cnt + step, cnt)
+        # strides sum to k-1, so a full prefix undercounts by one: final probe
+        probe = jnp.take_along_axis(
+            tab, jnp.minimum(cnt, k - 1)[..., None], axis=-1
+        )[..., 0]
+        cnt = cnt + (probe <= pos[:, None]).astype(jnp.int32)
+        have = cnt >= mrow
+        sel = jnp.clip(cnt - mrow, 0, k - 1)
+        p_sel = jnp.take_along_axis(tab, sel[..., None], axis=-1)[..., 0]
+        p_sel = jnp.where(active & have, p_sel, n)  # inactive -> +inf for min
+        start = jnp.min(p_sel, axis=-1)  # [E] largest covering q
+        covered = jnp.all(have | ~active, axis=-1) & jnp.any(active, axis=-1)
+        emit = ok & covered & (start < n) & (pos - start < window)
+        start = jnp.where(emit, start, pos)
+
+    # ---- §14 relevance per row (primary events only: one per position) ----
+    span = (pos - start).astype(jnp.float32)
+    contrib = jnp.where(emit & (primary > 0), 1.0 / (span + 1.0) ** 2, 0.0)
+    scores = jnp.zeros((r,), jnp.float32).at[row_s].add(
+        jnp.where(ok, contrib, 0.0)
+    )
+    scores = jnp.where(row_doc >= 0, scores, -jnp.inf)
+
+    # ---- per-query top-k ---------------------------------------------------
+    qids = jax.lax.broadcasted_iota(jnp.int32, (q, 1), 0)
+    scores_q = jnp.where(row_query[None, :] == qids, scores[None, :], -jnp.inf)
+    kk = min(top_k, r)
+    top_scores, idx = jax.lax.top_k(scores_q, kk)  # [Q, K]
+    top_docs = jnp.where(jnp.isfinite(top_scores), row_doc[idx], -1)
+
+    frag_per_row = (
+        jnp.zeros((r,), jnp.int32)
+        .at[row_s]
+        .add((emit & (primary > 0)).astype(jnp.int32))
+    )
+    n_fragments = (
+        jnp.zeros((q,), jnp.int32)
+        .at[jnp.clip(row_query, 0, q - 1)]
+        .add(jnp.where(row_query >= 0, frag_per_row, 0))
+    )
+    return {
+        "emit": emit,
+        "start": start,
+        "top_docs": top_docs,
+        "top_scores": top_scores,
+        "n_fragments": n_fragments,
+    }
+
+
+# ---------------------------------------------------------------------------
+# execution + vectorized readout
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FusedBatchResult:
+    """Per-query exact fragment sets plus the device's slot-level ranking."""
+
+    per_query: list[list[SearchResult]]  # deduped fragment union per query
+    top_docs: np.ndarray  # [Q, K] int32 (-1 pad)
+    top_scores: np.ndarray  # [Q, K] float32
+    n_fragments: np.ndarray  # [Q] pre-dedup emit counts
+
+
+def empty_batch_result(n_queries: int, top_k: int) -> FusedBatchResult:
+    return FusedBatchResult(
+        per_query=[[] for _ in range(n_queries)],
+        top_docs=np.full((n_queries, top_k), -1, np.int32),
+        top_scores=np.full((n_queries, top_k), -np.inf, np.float32),
+        n_fragments=np.zeros((n_queries,), np.int64),
+    )
+
+
+def run_query_batch(
+    plan: QueryBatchPlan,
+    *,
+    max_distance: int,
+    top_k: int = 16,
+    use_kernel: bool = False,
+    compute_dtype: str = "uint8",
+    interpret: bool = True,
+    stats: QueryStats | None = None,
+) -> FusedBatchResult:
+    """Dispatch ONE device program for the plan and read fragments out with a
+    single ``np.nonzero`` over the whole event batch."""
+    global _DISPATCHES
+    out = fused_serve_batch(
+        jnp.asarray(plan.events),
+        jnp.asarray(plan.primary),
+        jnp.asarray(plan.postab),
+        jnp.asarray(plan.row_doc),
+        jnp.asarray(plan.row_query),
+        jnp.asarray(plan.mult),
+        max_distance=max_distance,
+        query_budget=plan.query_budget,
+        window_len=plan.doc_len,
+        top_k=top_k,
+        compute_dtype=compute_dtype,
+        use_kernel=use_kernel,
+        interpret=interpret,
+    )
+    _DISPATCHES += 1
+    if stats is not None:
+        stats.device_dispatches += 1
+
+    # vectorized readout: one nonzero over the event batch (primary events
+    # carry one fragment per emitting position), then one np.unique for the
+    # cross-segment dedup — no per-document Python loop, no set hashing
+    emit = np.asarray(out["emit"]) & (plan.primary > 0)
+    (hits,) = np.nonzero(emit)
+    starts = np.asarray(out["start"])[hits].astype(np.int64)
+    ends = plan.events[hits, 1].astype(np.int64)
+    rows = plan.events[hits, 0]
+    docs = plan.row_doc[rows].astype(np.int64)
+    q_of = plan.row_query[rows].astype(np.int64)
+    n = plan.doc_len
+    nq = plan.n_queries
+    live = (q_of >= 0) & (q_of < nq)
+    frag_key = ((q_of * (docs.max(initial=0) + 1) + docs) * n + starts) * n + ends
+    uniq = np.unique(frag_key[live])
+    u_end = uniq % n
+    u_start = (uniq // n) % n
+    u_doc = (uniq // (n * n)) % (docs.max(initial=0) + 1)
+    u_q = uniq // (n * n * (docs.max(initial=0) + 1))
+    per_query: list[list[SearchResult]] = [[] for _ in range(nq)]
+    for qi, d, st, en in zip(
+        u_q.tolist(), u_doc.tolist(), u_start.tolist(), u_end.tolist()
+    ):
+        per_query[qi].append(SearchResult(doc_id=d, start=st, end=en))
+    return FusedBatchResult(
+        per_query=per_query,
+        top_docs=np.asarray(out["top_docs"])[:nq],
+        top_scores=np.asarray(out["top_scores"])[:nq],
+        n_fragments=np.asarray(out["n_fragments"])[:nq],
+    )

@@ -103,7 +103,8 @@ def serve_step_sharded(
     per-shard top-k lists (KBs).  This is exactly DESIGN.md §4's
     document-parallel layout — B stays replicated, clusters are the grid.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    mesh = get_mesh() if get_mesh is not None else None
     ns, b = postings.shape[0], postings.shape[1]
     kk = min(top_k, n_clusters)
 

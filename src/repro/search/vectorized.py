@@ -1,12 +1,14 @@
 """Vectorized (batched, device-side) subquery execution.
 
 This is the serving-path implementation of the Combiner: identical result
-semantics to ``core/combiner.py`` (validated in tests), but expressed as
-fixed-shape array programs — scatter postings into per-document occupancy,
-run the parallel window cover (Pallas kernel or jnp ref), read fragments out.
+semantics to ``core/combiner.py`` (validated in tests), expressed through the
+fused query-at-a-time pipeline in ``search/fused.py`` — compact (doc_slot,
+pos, lemma) event transport, on-device scatter + window cover + §14 scoring +
+per-query top-k in ONE jit'd program per query batch, and a single-`nonzero`
+fragment readout.
 
-Used by ``search/distributed.py`` (document-sharded shard_map serving) and
-by the ``paper_search`` architecture's ``serve_step``.
+Used by ``search/distributed.py`` (document-sharded serving) and by the
+``paper_search`` architecture's ``serve_step``.
 """
 
 from __future__ import annotations
@@ -16,24 +18,32 @@ from typing import Sequence
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
-from ..core.keys import SelectedKey, Subquery, select_keys
+from ..core.keys import SelectedKey, Subquery
 from ..core.postings import QueryStats, SearchResult
-from ..core.window import results_from_cover
 from ..index.builder import IndexSet
-from ..kernels.ops import proximity_search_scores
+from .fused import (
+    FusedBatchResult,
+    bucket_pow2,
+    empty_batch_result,
+    extract_segment_events,
+    plan_query_batch,
+    run_query_batch,
+)
 
-__all__ = ["VectorizedEngine", "pack_subquery_events"]
+__all__ = ["VectorizedEngine", "PackedEvents", "pack_subquery_events"]
 
 
 @dataclass
 class PackedEvents:
-    """Fixed-shape per-document event tensors for one subquery."""
+    """Compact fixed-shape event transport for one subquery (DESIGN.md §9.1).
 
+    ``events`` replaces the old dense ``[B, L, doc_len]`` host occupancy: the
+    device scatter rebuilds occupancy on-chip from E event triples, so host
+    transport is O(events), not O(docs * lemmas * doc_len).
+    """
+
+    events: np.ndarray  # [E, 3] int32 (doc_slot, pos, lemma), pad = -1
     doc_ids: np.ndarray  # [B] int32 (pad = -1)
-    occ: np.ndarray  # [B, L, N] int32
     mult: np.ndarray  # [L] int32
     lemmas: list[str]  # local lemma id -> lemma
 
@@ -44,83 +54,91 @@ def pack_subquery_events(
     keys: Sequence[SelectedKey] | None = None,
     doc_len: int = 512,
     stats: QueryStats | None = None,
-) -> PackedEvents:
-    """Host-side: key postings -> dense per-doc occupancy (§10.4's Set calls,
-    batched).  Dedup is free: occupancy is idempotent under scatter."""
-    keys = list(keys) if keys is not None else select_keys(subquery, index.fl)
-    lemmas = subquery.unique_lemmas()
-    lid = {l: i for i, l in enumerate(lemmas)}
-    L = len(lemmas)
-    mult_map = subquery.multiplicity()
-    mult = np.array([mult_map[l] for l in lemmas], dtype=np.int32)
+) -> PackedEvents | None:
+    """Host-side: key postings -> compact event triples (§10.4's Set calls,
+    batched).  Dedup is free: the on-device occupancy scatter is idempotent.
 
-    # vectorized event extraction: one (doc, pos, lemma) column set per
-    # unstarred key slot — no per-posting Python work
-    ev_doc, ev_pos, ev_lem = [], [], []
-    for key in keys:
-        rows = np.asarray(index.key_postings(key.components))
-        if stats is not None:
-            stats.postings_read += len(rows)
-            stats.bytes_read += rows.nbytes
-        if not len(rows):
-            continue
-        comps, stars = key.components, key.starred
-        for slot in range(len(comps)):
-            if stars[slot]:
-                continue
-            pos = rows[:, 1] if slot == 0 else rows[:, 1] + rows[:, 1 + slot]
-            ev_doc.append(rows[:, 0])
-            ev_pos.append(pos)
-            ev_lem.append(np.full(len(rows), lid[comps[slot]], np.int32))
-    if ev_doc:
-        doc_a = np.concatenate(ev_doc)
-        pos_a = np.concatenate(ev_pos)
-        lem_a = np.concatenate(ev_lem)
-        ok = (pos_a >= 0) & (pos_a < doc_len)
-        doc_a, pos_a, lem_a = doc_a[ok], pos_a[ok], lem_a[ok]
-        docs, doc_idx = np.unique(doc_a, return_inverse=True)
-    else:
-        docs = np.empty((0,), np.int32)
-    # pad the doc batch to a power of two: stable shapes -> jit cache hits
-    b_real = max(1, len(docs))
-    B = 1 << (b_real - 1).bit_length()
-    occ_t = np.zeros((B, L, doc_len), dtype=np.int32)
-    doc_ids = np.full((B,), -1, dtype=np.int32)
-    if len(docs):
-        occ_t[doc_idx, lem_a, pos_a] = 1
-        doc_ids[: len(docs)] = docs
-    return PackedEvents(doc_ids=doc_ids, occ=occ_t, mult=mult, lemmas=lemmas)
+    Returns ``None`` for an empty subquery — callers short-circuit before the
+    device call instead of dispatching an all-padding batch (the skip is
+    counted in ``QueryStats.empty_subqueries``).  Budgets are padded to
+    powers of two: stable shapes -> jit cache hits.
+    """
+    seg = extract_segment_events(
+        subquery, index, keys=keys, doc_len=doc_len, stats=stats
+    )
+    if seg is None:
+        return None
+    e_budget = bucket_pow2(len(seg.slot), lo=64)
+    b_budget = bucket_pow2(len(seg.doc_ids), lo=8)
+    events = np.full((e_budget, 3), -1, np.int32)
+    events[: len(seg.slot), 0] = seg.slot
+    events[: len(seg.slot), 1] = seg.pos
+    events[: len(seg.slot), 2] = seg.lem
+    doc_ids = np.full((b_budget,), -1, np.int32)
+    doc_ids[: len(seg.doc_ids)] = seg.doc_ids
+    return PackedEvents(
+        events=events, doc_ids=doc_ids, mult=seg.mult, lemmas=seg.lemmas
+    )
 
 
 class VectorizedEngine:
-    """Batched Combiner over one index shard."""
+    """Batched Combiner over one index shard (the fused serving pipeline)."""
 
-    def __init__(self, index: IndexSet, use_kernel: bool = False, doc_len: int = 512):
+    def __init__(
+        self,
+        index: IndexSet,
+        use_kernel: bool = False,
+        doc_len: int = 512,
+        compute_dtype: str = "uint8",
+    ):
         self.index = index
         self.use_kernel = use_kernel
         self.doc_len = doc_len
+        self.compute_dtype = compute_dtype
+
+    def search_query_batch(
+        self,
+        batch: Sequence[Sequence[Subquery]],
+        top_k: int = 16,
+        per_query_stats: Sequence[QueryStats] | None = None,
+    ) -> tuple[FusedBatchResult, QueryStats]:
+        """Serve a whole query batch with ONE device program.
+
+        ``batch[qi]`` lists query ``qi``'s subqueries; the result carries the
+        exact (deduplicated) fragment union per query plus the device-side
+        slot-level top-k ranking.  ``per_query_stats`` (one accumulator per
+        query) splits the I/O accounting per query; the returned stats stay
+        batch-level either way.
+        """
+        stats = QueryStats()
+        work = [[(sub, self.index) for sub in subs] for subs in batch]
+        plan = plan_query_batch(
+            work,
+            doc_len=self.doc_len,
+            stats=per_query_stats if per_query_stats is not None else stats,
+        )
+        if plan is None:
+            result = empty_batch_result(len(batch), top_k)
+        else:
+            result = run_query_batch(
+                plan,
+                max_distance=self.index.max_distance,
+                top_k=top_k,
+                use_kernel=self.use_kernel,
+                compute_dtype=self.compute_dtype,
+                stats=stats,
+            )
+        if per_query_stats is not None:
+            for st in per_query_stats:
+                st.device_dispatches = stats.device_dispatches
+                stats.postings_read += st.postings_read
+                stats.bytes_read += st.bytes_read
+                stats.empty_subqueries += st.empty_subqueries
+        stats.results = sum(len(r) for r in result.per_query)
+        return result, stats
 
     def search_subquery(
         self, subquery: Subquery
     ) -> tuple[list[SearchResult], QueryStats]:
-        stats = QueryStats()
-        packed = pack_subquery_events(
-            subquery, self.index, doc_len=self.doc_len, stats=stats
-        )
-        B = packed.occ.shape[0]
-        mult = np.broadcast_to(packed.mult, (B, packed.mult.shape[0]))
-        emit, start, scores = proximity_search_scores(
-            jnp.asarray(packed.occ),
-            jnp.asarray(mult),
-            self.index.max_distance,
-            use_kernel=self.use_kernel,
-        )
-        emit_np, start_np = np.asarray(emit), np.asarray(start)
-        results: list[SearchResult] = []
-        for i, doc in enumerate(packed.doc_ids.tolist()):
-            if doc < 0:
-                continue
-            for d, s, e in results_from_cover(doc, emit_np[i], start_np[i]):
-                results.append(SearchResult(doc_id=d, start=s, end=e))
-        stats.results = len(results)
-        return results, stats
+        result, stats = self.search_query_batch([[subquery]])
+        return result.per_query[0], stats

@@ -1,0 +1,78 @@
+"""Fallback for the optional ``hypothesis`` dev dependency.
+
+The tier-1 suite must run green without optional packages (the serving
+containers ship a minimal image).  When ``hypothesis`` is installed (see
+``requirements-dev.txt``) tests get the real property-based machinery; when
+it is missing, this shim provides API-compatible ``given`` / ``settings`` /
+``strategies`` that draw ``max_examples`` deterministic pseudo-random
+examples per test — a fixed-seed sampler, not a shrinking property engine,
+but the same coverage style.
+
+Usage in test modules::
+
+    from tests._hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module naming
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [
+                    elem.draw(rng) for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
+
+    def settings(max_examples=20, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                # deterministic per-test stream: repeatable failures
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                for _ in range(n):
+                    fn(*args, *(s.draw(rng) for s in strats), **kwargs)
+
+            # drawn values fill the trailing params; hide them from pytest's
+            # fixture resolution (real hypothesis does the same)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            wrapper.__signature__ = sig.replace(
+                parameters=params[: len(params) - len(strats)]
+            )
+            return wrapper
+
+        return deco

@@ -1,0 +1,279 @@
+"""Fused batched serving pipeline: exact fragment equivalence with the host
+Combiner (se2.4) across corpora / multi-lemma queries / dead-shard fan-out,
+one-device-dispatch-per-query-batch serving, jit-cache stability under the
+power-of-two shape budgets, and the Step-1 intersect pre-filter."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core.combiner import se24_combiner
+from repro.core.keys import Subquery, expand_subqueries, select_keys
+from repro.core.lemma import Lemmatizer
+from repro.core.oracle import oracle_search
+from repro.core.window import window_cover_batch, window_cover_rank_batch
+from repro.index import DocumentStore, build_indexes, synthesize_corpus
+from repro.search import fused
+from repro.search.distributed import ShardedSearchService
+from repro.search.vectorized import VectorizedEngine, pack_subquery_events
+
+QUERIES = [
+    "who are you who",
+    "to be or not to be",
+    "what do you do all day",
+    "the time of war",
+    "time and time again",
+    "i need you",
+    "how to find the mean",
+    "who is who in the world of war",
+]
+
+
+def _expected_union(batch_subs, idx):
+    out = []
+    for subs in batch_subs:
+        frs = set()
+        for sub in subs:
+            r, _ = se24_combiner(sub, idx)
+            frs.update(r)
+        out.append(frs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# exact equivalence with the host Combiner
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_docs,seed", [(25, 3), (60, 7), (110, 1)])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_fused_batch_equals_combiner_across_corpora(n_docs, seed, use_kernel):
+    store = synthesize_corpus(n_docs=n_docs, doc_len=120, vocab_size=500, seed=seed)
+    idx = build_indexes(store, sw_count=60, fu_count=120, max_distance=5)
+    lem = Lemmatizer()
+    batch = [expand_subqueries(q, lem) for q in QUERIES[:5]]
+    eng = VectorizedEngine(idx, use_kernel=use_kernel)
+    res, stats = eng.search_query_batch(batch)
+    for frs, expected in zip(res.per_query, _expected_union(batch, idx)):
+        assert set(frs) == expected
+    assert stats.device_dispatches == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fused_random_corpus_random_subqueries(seed):
+    """Random Zipf corpora + random multi-lemma subqueries (with duplicate
+    lemmas): the fused pipeline equals the scalar Combiner exactly."""
+    rng = np.random.default_rng(seed)
+    vocab = [f"w{i}" for i in range(15)]
+    probs = np.array([1 / (i + 1) ** 1.1 for i in range(15)])
+    probs /= probs.sum()
+    texts = [" ".join(rng.choice(vocab, size=60, p=probs)) for _ in range(8)]
+    store = DocumentStore.from_texts(texts)
+    idx = build_indexes(store, sw_count=10_000, fu_count=0, max_distance=4)
+    eng = VectorizedEngine(idx)
+    subs = [
+        Subquery(tuple(rng.choice(vocab[:6], size=int(rng.integers(2, 5)), replace=True)))
+        for _ in range(3)
+    ]
+    res, _ = eng.search_query_batch([[s] for s in subs])
+    for sub, frs in zip(subs, res.per_query):
+        expected, _ = se24_combiner(sub, idx)
+        assert set(frs) == set(expected)
+
+
+def test_fused_keeps_fragments_beyond_doc_len_hint():
+    """Documents longer than the engine's doc_len hint must not lose
+    fragments: the position budget follows the data, not the hint."""
+    filler = " ".join(f"x{i % 37}" for i in range(640))
+    texts = [filler + " alpha beta gamma", "alpha beta gamma " + filler]
+    store = DocumentStore.from_texts(texts)
+    idx = build_indexes(store, sw_count=10_000, fu_count=0, max_distance=5)
+    sub = Subquery(("alpha", "beta", "gamma"))
+    expected, _ = se24_combiner(sub, idx)
+    assert any(r.start >= 512 for r in expected), "needs a match beyond 512"
+    eng = VectorizedEngine(idx, doc_len=512)
+    got, _ = eng.search_subquery(sub)
+    assert set(got) == set(expected)
+
+
+def test_fused_sharded_service_with_dead_shards(small_corpus):
+    svc_f = ShardedSearchService(small_corpus, n_shards=4, sw_count=60,
+                                 fu_count=150, algorithm="fused")
+    svc_h = ShardedSearchService(small_corpus, n_shards=4, sw_count=60,
+                                 fu_count=150, algorithm="se2.4")
+    for dead in ((), (1,), (0, 3)):
+        fused.reset_dispatch_count()
+        resps_f = svc_f.search_batch(QUERIES[:4], top_k=20, dead_shards=dead)
+        assert fused.dispatch_count() == 1
+        for q, rf in zip(QUERIES[:4], resps_f):
+            rh = svc_h.search(q, top_k=20, dead_shards=dead)
+            assert {d.doc_id for d in rf.docs} == {d.doc_id for d in rh.docs}
+            np.testing.assert_allclose(
+                sorted(d.score for d in rf.docs),
+                sorted(d.score for d in rh.docs),
+                rtol=1e-6,
+            )
+
+
+# ---------------------------------------------------------------------------
+# one device dispatch per query batch (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_single_dispatch_for_8_query_batch(small_index, lemmatizer):
+    batch = [expand_subqueries(q, lemmatizer) for q in QUERIES]
+    assert len(batch) == 8
+    assert any(len(subs) > 1 for subs in batch), "needs multi-subquery queries"
+    eng = VectorizedEngine(small_index)
+    fused.reset_dispatch_count()
+    res, stats = eng.search_query_batch(batch)
+    assert fused.dispatch_count() == 1
+    assert stats.device_dispatches == 1
+    assert sum(len(r) for r in res.per_query) > 0
+
+
+def test_device_topk_is_ranked_and_doc_level_sane(small_index, lemmatizer):
+    batch = [expand_subqueries(q, lemmatizer) for q in QUERIES[:4]]
+    eng = VectorizedEngine(small_index)
+    res, _ = eng.search_query_batch(batch, top_k=8)
+    sc = res.top_scores
+    finite = np.isfinite(sc)
+    diffs = np.diff(np.where(finite, sc, np.float32(0.0)), axis=1)
+    both_finite = finite[:, 1:] & finite[:, :-1]
+    assert (diffs[both_finite] <= 1e-9).all()
+    # padding (-inf) only ever trails real scores
+    assert (finite[:, :-1] | ~finite[:, 1:]).all()
+    # every finite-score doc id is a real doc that has fragments
+    for qi, frs in enumerate(res.per_query):
+        docs_with_frags = {f.doc_id for f in frs}
+        listed = set(res.top_docs[qi][finite[qi]].tolist())
+        assert listed <= docs_with_frags | {-1}
+
+
+# ---------------------------------------------------------------------------
+# empty-subquery short-circuit (no all-padding dispatch)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_subquery_short_circuits_before_dispatch(small_index):
+    eng = VectorizedEngine(small_index)
+    sub = Subquery(("zzzunknownlemma", "qqqmissing"))
+    fused.reset_dispatch_count()
+    results, stats = eng.search_subquery(sub)
+    assert results == []
+    assert fused.dispatch_count() == 0, "empty subquery must not dispatch"
+    assert stats.empty_subqueries == 1
+    assert stats.device_dispatches == 0
+    assert pack_subquery_events(sub, small_index) is None
+
+
+# ---------------------------------------------------------------------------
+# jit-cache stability: bucketed shapes => bounded compilations
+# ---------------------------------------------------------------------------
+
+
+def test_jit_cache_bounded_under_varying_batches(small_index, lemmatizer):
+    cache_size = getattr(fused.fused_serve_batch, "_cache_size", None)
+    if cache_size is None:
+        pytest.skip("jax version exposes no jit cache introspection")
+    eng = VectorizedEngine(small_index)
+    before = cache_size()
+    n_calls = 0
+    # vary query count, query mix, and subquery counts: the pow2 budgets
+    # must collapse these onto a handful of compiled shapes
+    for size in (1, 2, 3, 4, 4, 3, 2, 1):
+        for offset in (0, 2):
+            batch = [
+                expand_subqueries(q, lemmatizer)
+                for q in QUERIES[offset : offset + size]
+            ]
+            eng.search_query_batch(batch)
+            n_calls += 1
+    grown = cache_size() - before
+    assert n_calls == 16
+    assert grown <= 8, f"{grown} compilations for 16 bucketed calls"
+
+
+# ---------------------------------------------------------------------------
+# Step-1 intersect pre-filter (device kernel == host searchsorted)
+# ---------------------------------------------------------------------------
+
+
+def test_intersect_candidates_device_matches_host():
+    rng = np.random.default_rng(2)
+    lists = [
+        np.unique(rng.integers(0, 4000, size=rng.integers(50, 1500)).astype(np.int32))
+        for _ in range(3)
+    ]
+    host = fused.intersect_candidates(lists, device_threshold=10**9)
+    dev = fused.intersect_candidates(lists, device_threshold=1)
+    np.testing.assert_array_equal(host, dev)
+    expected = lists[0]
+    for other in lists[1:]:
+        expected = np.intersect1d(expected, other)
+    np.testing.assert_array_equal(np.sort(host), expected)
+
+
+def test_prefilter_matches_combiner_doc_gate(small_index, lemmatizer):
+    """Docs dropped by the pre-filter are exactly those the Combiner's Step-1
+    alignment would never visit: fused results stay equal to se2.4."""
+    for q in QUERIES[:4]:
+        for sub in expand_subqueries(q, lemmatizer)[:1]:
+            keys = select_keys(sub, small_index.fl)
+            if len(keys) < 2:
+                continue
+            seg = fused.extract_segment_events(sub, small_index)
+            expected, _ = se24_combiner(sub, small_index)
+            if seg is None:
+                assert expected == []
+                continue
+            assert {r.doc_id for r in expected} <= set(seg.doc_ids.tolist())
+
+
+# ---------------------------------------------------------------------------
+# rank-based cover == windowed cover (the identity the fused path relies on)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_rank_cover_equals_window_cover(seed):
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(1, 5))
+    N = int(rng.choice([32, 96, 128]))
+    D = int(rng.integers(1, 6))
+    occ = (rng.random((3, L, N)) < rng.choice([0.05, 0.2, 0.5])).astype(np.int32)
+    mult = rng.integers(0, 3, (3, L)).astype(np.int32)
+    mult[:, 0] = np.maximum(mult[:, 0], 1)  # at least one active lemma
+    w = 2 * D + 1
+    e1, s1 = window_cover_batch(jnp.asarray(occ), jnp.asarray(mult), w)
+    e2, s2 = window_cover_rank_batch(jnp.asarray(occ), jnp.asarray(mult), w)
+    e1, s1, e2, s2 = map(np.asarray, (e1, s1, e2, s2))
+    np.testing.assert_array_equal(e1, e2)
+    np.testing.assert_array_equal(np.where(e1, s1, 0), np.where(e1, s2, 0))
+
+
+# ---------------------------------------------------------------------------
+# compute_dtype plumbing: uint8 kernel == int32 kernel == jnp ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compute_dtype", ["uint8", "int32"])
+def test_proximity_kernel_compute_dtype(compute_dtype):
+    from repro.kernels.ops import proximity_window, proximity_window_ref
+
+    rng = np.random.default_rng(5)
+    occ = (rng.random((4, 3, 256)) < 0.1).astype(np.int32)
+    mult = np.tile([1, 2, 1], (4, 1)).astype(np.int32)
+    ek, sk = proximity_window(
+        jnp.asarray(occ), jnp.asarray(mult), 5, compute_dtype=compute_dtype
+    )
+    er, sr = proximity_window_ref(jnp.asarray(occ), jnp.asarray(mult), 5)
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(er))
+    np.testing.assert_array_equal(
+        np.where(np.asarray(er), np.asarray(sk), 0),
+        np.where(np.asarray(er), np.asarray(sr), 0),
+    )

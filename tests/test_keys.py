@@ -1,6 +1,6 @@
 """§6 key selection, including the paper's Lord Hornblower example."""
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.keys import Subquery, select_keys
 from repro.core.lemma import FLList

@@ -1,6 +1,10 @@
 """Integration: the ``paper_search`` device serve_step must reproduce the
 host engine's §14 ranking when fed the same postings (clusters == documents).
-This ties the dry-run's arch to the paper-faithful implementation."""
+This ties the dry-run's arch to the paper-faithful implementation.
+
+The compact event transport (``pack_subquery_events``) emits exactly
+serve_step's posting format — (doc_slot, pos, lemma) triples — so the packer
+output feeds the device program directly, no re-encoding."""
 
 import numpy as np
 import pytest
@@ -17,20 +21,16 @@ from repro.search.vectorized import pack_subquery_events
 def test_serve_step_matches_engine_ranking(query, small_index, lemmatizer):
     sub = expand_subqueries(query, lemmatizer)[0]
     packed = pack_subquery_events(sub, small_index, doc_len=128)
-    n_docs = packed.occ.shape[0]
-    L, N = packed.occ.shape[1], packed.occ.shape[2]
-    # clusters == documents; postings = occupancy events re-encoded
-    events = np.argwhere(packed.occ > 0)  # (doc, lemma, pos)
-    P = 1 + len(events)
-    postings = np.full((1, P, 3), -1, np.int32)
-    for i, (d, l, p) in enumerate(events):
-        postings[0, i] = (d, p, l)
+    assert packed is not None
+    n_docs = len(packed.doc_ids)
+    # clusters == documents; the compact triples ARE serve_step postings
+    postings = packed.events[None]
     cluster_doc = packed.doc_ids[None].astype(np.int32)
     mult = packed.mult[None]
     out = serve_step(
         jnp.asarray(postings), jnp.asarray(cluster_doc), jnp.asarray(mult),
         max_distance=small_index.max_distance,
-        n_clusters=n_docs, window_len=N, top_k=min(8, n_docs),
+        n_clusters=n_docs, window_len=128, top_k=min(8, n_docs),
     )
     top_docs = [int(d) for d in np.asarray(out["top_docs"][0]) if d >= 0]
     top_scores = np.asarray(out["top_scores"][0])
@@ -52,16 +52,13 @@ def test_serve_step_matches_engine_ranking(query, small_index, lemmatizer):
 def test_serve_step_fragment_counts(small_index, lemmatizer):
     sub = expand_subqueries("who are you who", lemmatizer)[0]
     packed = pack_subquery_events(sub, small_index, doc_len=128)
-    events = np.argwhere(packed.occ > 0)
-    postings = np.full((1, len(events) + 1, 3), -1, np.int32)
-    for i, (d, l, p) in enumerate(events):
-        postings[0, i] = (d, p, l)
+    assert packed is not None
     out = serve_step(
-        jnp.asarray(postings),
+        jnp.asarray(packed.events[None]),
         jnp.asarray(packed.doc_ids[None].astype(np.int32)),
         jnp.asarray(packed.mult[None]),
         max_distance=small_index.max_distance,
-        n_clusters=packed.occ.shape[0], window_len=128, top_k=4,
+        n_clusters=len(packed.doc_ids), window_len=128, top_k=4,
     )
     from repro.core.combiner import se24_combiner
 

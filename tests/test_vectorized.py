@@ -3,7 +3,7 @@ plus hypothesis properties for the closed-form window cover."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
