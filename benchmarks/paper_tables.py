@@ -276,3 +276,89 @@ def bench_serving_results_match(serving: dict) -> bool:
         serving["per_subquery_seed"]["results"]
         == serving["fused_batch"]["results"]
     )
+
+
+def bench_indexing(n_docs=120, doc_len=180, n_batches=6, quick=False):
+    """Index-construction throughput: full build vs incremental ingest vs
+    merge + compact (the arXiv 2006.07954 construction concern).
+
+    Reported docs/sec:
+      * ``full_build``          — one-shot ``build_indexes`` over the corpus;
+      * ``incremental_pinned``  — batch ingest, FL pinned after the first
+        generation (``commit(refresh_fl=False)``, the serving mode);
+      * ``incremental_refresh`` — batch ingest with a full FL refresh and
+        drift re-keying at every generation (the exactness mode);
+      * ``compact``             — k-way merge of all generations' segments
+        (plus tombstone GC for 10% deletes), in segments/sec and docs/sec.
+
+    The differential guard at the end checks the pinned-FL incremental
+    index equals a rebuild pinning the same FL-list, and the refresh-mode
+    index equals a plain rebuild; the verdict is returned as
+    ``results_match_rebuild`` (+ ``mismatch_reason``) and gated by the
+    caller (``benchmarks/run.py`` exits non-zero on a mismatch).
+    """
+    from repro.index import DocumentStore, IncrementalIndexer, index_sets_equal
+    from repro.index.builder import build_indexes as _build
+
+    if quick:
+        n_docs, doc_len, n_batches = 60, 120, 4
+    store = synthesize_corpus(n_docs=n_docs, doc_len=doc_len, vocab_size=2000, seed=17)
+    texts = [d.text for d in store.documents]
+    batch = max(1, len(texts) // n_batches)
+
+    t0 = time.perf_counter()
+    full = _build(store, sw_count=80, fu_count=300, max_distance=5)
+    t_full = time.perf_counter() - t0
+
+    def ingest(refresh_fl: bool):
+        ix = IncrementalIndexer(
+            sw_count=80, fu_count=300, max_distance=5, lemmatizer=store.lemmatizer
+        )
+        t0 = time.perf_counter()
+        for i in range(0, len(texts), batch):
+            ix.add_documents(texts[i : i + batch])
+            ix.commit(refresh_fl=refresh_fl or i == 0)
+        return ix, time.perf_counter() - t0
+
+    ix_pin, t_pin = ingest(refresh_fl=False)
+    ix_ref, t_ref = ingest(refresh_fl=True)
+
+    # deletes + compaction over the refresh-mode index
+    ids = sorted(ix_ref.documents)
+    for victim in ids[::10]:  # ~10% deletes
+        ix_ref.delete_document(victim)
+    ix_ref.commit()
+    n_segments = len(ix_ref.segments)
+    t0 = time.perf_counter()
+    ix_ref.compact()
+    t_compact = time.perf_counter() - t0
+
+    eq_pin, why_pin = index_sets_equal(
+        ix_pin.index.to_index_set(),
+        _build(ix_pin.surviving_store(), sw_count=80, fu_count=300,
+               max_distance=5, fl=ix_pin.fl),
+    )
+    eq_ref, why_ref = index_sets_equal(
+        ix_ref.index.to_index_set(), ix_ref.rebuild_index_set()
+    )
+    mismatch = []
+    if not eq_pin:
+        mismatch.append(f"pinned-FL incremental != pinned rebuild: {why_pin}")
+    if not eq_ref:
+        mismatch.append(f"refresh incremental != rebuild: {why_ref}")
+
+    return {
+        "n_docs": len(texts),
+        "doc_len": doc_len,
+        "batch_docs": batch,
+        "full_build": {"sec": t_full, "docs_per_sec": len(texts) / t_full},
+        "incremental_pinned": {"sec": t_pin, "docs_per_sec": len(texts) / t_pin},
+        "incremental_refresh": {"sec": t_ref, "docs_per_sec": len(texts) / t_ref},
+        "compact": {
+            "sec": t_compact,
+            "segments_merged": n_segments,
+            "docs_per_sec": len(ix_ref.documents) / max(t_compact, 1e-9),
+        },
+        "results_match_rebuild": bool(eq_pin and eq_ref),
+        "mismatch_reason": "; ".join(mismatch),
+    }

@@ -20,6 +20,7 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 from benchmarks.paper_tables import (  # noqa: E402
     bench_algorithms,
     bench_duplicates,
+    bench_indexing,
     bench_serving,
     bench_serving_results_match,
     bench_vectorized,
@@ -77,6 +78,22 @@ def main() -> None:
     if args.json:
         out_path = Path(__file__).parent.parent / "BENCH_serving.json"
         out_path.write_text(json.dumps(serving, indent=2) + "\n")
+        print(f"# wrote {out_path}")
+
+    # ---- index construction: full build vs incremental ingest vs compact ----
+    indexing = bench_indexing(quick=args.quick)
+    for path in ("full_build", "incremental_pinned", "incremental_refresh"):
+        print(f"indexing_{path},{indexing[path]['sec']*1e6:.0f},"
+              f"docs_per_sec={indexing[path]['docs_per_sec']:.1f}")
+    print(f"indexing_compact,{indexing['compact']['sec']*1e6:.0f},"
+          f"segments_merged={indexing['compact']['segments_merged']};"
+          f"docs_per_sec={indexing['compact']['docs_per_sec']:.1f}")
+    if not indexing["results_match_rebuild"]:
+        print(f"indexing_results_MISMATCH,0,{indexing['mismatch_reason']}")
+        sys.exit(1)
+    if args.json:
+        out_path = Path(__file__).parent.parent / "BENCH_indexing.json"
+        out_path.write_text(json.dumps(indexing, indent=2) + "\n")
         print(f"# wrote {out_path}")
 
     # ---- roofline (from dry-run artifacts, if present) ----------------------

@@ -1,9 +1,10 @@
-"""Quickstart: build a corpus, index it, run proximity queries (SE2.4).
+"""Quickstart: build a corpus, index it, run proximity queries (SE2.4),
+then keep the index fresh with incremental ingest / delete / compact.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.index import build_indexes, synthesize_corpus
+from repro.index import IncrementalIndexer, build_indexes, synthesize_corpus
 from repro.search.engine import SearchEngine
 
 # 1) corpus: Zipf-distributed synthetic text + the paper's example phrases
@@ -31,3 +32,27 @@ for query in ["who are you who", "to be or not to be", "how to find the mean"]:
         snippet = " ".join(words[f0.start : f0.end + 1])
         print(f"  doc {doc.doc_id:4d}  score={doc.score:.4f}  {frags}")
         print(f"       ...{snippet}...")
+
+# 4) incremental construction: ingest in batches, delete, compact — the
+#    SAME engine keeps serving the live multi-segment view throughout
+print("\n-- incremental ingest --")
+indexer = IncrementalIndexer(sw_count=80, fu_count=250, max_distance=5,
+                             lemmatizer=store.lemmatizer)
+live = SearchEngine(indexer, lemmatizer=store.lemmatizer, algorithm="se2.4")
+texts = [d.text for d in store.documents]
+for start in range(0, len(texts), 40):
+    indexer.add_documents(texts[start : start + 40])
+    report = indexer.commit()
+    hits = live.search("who are you who", top_k=1)
+    print(f"gen {indexer.generation}: +{report['new_docs']} docs "
+          f"(re-keyed {report['rekeyed_docs']} for FL drift, "
+          f"{report['segments']} segments) -> "
+          f"{hits.stats.results} fragments live")
+
+doomed = next(iter(indexer.documents))
+indexer.delete_document(doomed)  # tombstone: visible immediately
+report = indexer.compact(memory_budget_bytes=32 << 20)
+print(f"deleted doc {doomed}, compacted to {report['segments']} segment(s), "
+      f"collected {report['collected']} tombstone(s)")
+print(f"post-compact: {live.search('who are you who', top_k=1).stats.results} "
+      f"fragments live")

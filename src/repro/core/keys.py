@@ -21,11 +21,56 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Iterable, Sequence
 
 from .lemma import FLList, Lemmatizer
 
-__all__ = ["SelectedKey", "select_keys", "expand_subqueries", "Subquery"]
+__all__ = [
+    "SelectedKey",
+    "select_keys",
+    "expand_subqueries",
+    "Subquery",
+    "canonicalize_key",
+    "lemma_order_signature",
+]
+
+
+def canonicalize_key(
+    components: Sequence[str], starred: Sequence[bool], fl: FLList
+) -> tuple[tuple[str, ...], tuple[bool, ...]]:
+    """Canonical §3 component order (``f <= s <= t`` by FL-number, lexeme tie
+    break, star marks travel with their component).
+
+    Shared by §6 selection and by the incremental indexer: segment posting
+    dicts are keyed by these tuples, so every segment of a multi-segment
+    index must canonicalize against the SAME FL-list for query-time key
+    lookup to see a single merged posting list per key.
+    """
+    order = sorted(
+        range(len(components)),
+        key=lambda i: (fl.number(components[i]), components[i], starred[i]),
+    )
+    return (
+        tuple(components[i] for i in order),
+        tuple(starred[i] for i in order),
+    )
+
+
+def lemma_order_signature(
+    lemmas: Iterable[str], fl: FLList
+) -> tuple[tuple[str, ...], tuple[int, ...]]:
+    """The projection of FL-list state that §3 row generation and §6 key
+    selection actually depend on, restricted to one document's lemma set:
+    the *relative* FL order of the lemmas plus each lemma's type.
+
+    Two FL generations that agree on this signature for a document produce
+    byte-identical postings for it (absolute FL-numbers only ever reach disk
+    through NSW stop-lemma ids, which the incremental indexer remaps
+    separately) — this is the exactness test behind FL-drift re-keying in
+    ``index/incremental.py``.
+    """
+    ordered = sorted(set(lemmas), key=lambda l: (fl.number(l), l))
+    return tuple(ordered), tuple(int(fl.lemma_type(l)) for l in ordered)
 
 
 @dataclass(frozen=True)
@@ -189,11 +234,6 @@ def select_keys(subquery: Subquery, fl: FLList, arity: int = 3) -> list[Selected
             stars.append(True)
 
         # canonicalize: sort components by FL-number, stars travel along.
-        order = sorted(range(len(comps)), key=lambda i: (fl.number(comps[i]), comps[i], stars[i]))
-        keys.append(
-            SelectedKey(
-                components=tuple(comps[i] for i in order),
-                starred=tuple(stars[i] for i in order),
-            )
-        )
+        comps_c, stars_c = canonicalize_key(comps, stars, fl)
+        keys.append(SelectedKey(components=comps_c, starred=stars_c))
     return keys

@@ -1,5 +1,12 @@
 from .corpus import Document, DocumentStore, synthesize_corpus, PAPER_EXAMPLE_DOCS
-from .builder import IndexSet, build_indexes
+from .builder import IndexSet, build_indexes, build_segment
+from .incremental import (
+    IncrementalIndexer,
+    Segment,
+    SegmentedIndexSet,
+    as_index_set,
+    index_sets_equal,
+)
 
 __all__ = [
     "Document",
@@ -8,4 +15,10 @@ __all__ = [
     "PAPER_EXAMPLE_DOCS",
     "IndexSet",
     "build_indexes",
+    "build_segment",
+    "IncrementalIndexer",
+    "Segment",
+    "SegmentedIndexSet",
+    "as_index_set",
+    "index_sets_equal",
 ]

@@ -27,7 +27,7 @@ import numpy as np
 from ..core.lemma import FLList, LemmaType
 from .corpus import DocumentStore
 
-__all__ = ["IndexSet", "build_indexes", "NSWRecords"]
+__all__ = ["IndexSet", "build_indexes", "build_segment", "NSWRecords"]
 
 _POSTING_BYTES = {1: 8, 2: 12, 3: 16}  # int32 record sizes per key arity
 
@@ -102,37 +102,50 @@ def _sorted_rows(rows: list[tuple[int, ...]], width: int) -> np.ndarray:
     return arr[order]
 
 
-def build_indexes(
-    store: DocumentStore,
-    sw_count: int,
-    fu_count: int,
-    max_distance: int = 5,
-    build_pair: bool = True,
-    build_degenerate: bool = True,
-    triple_key_filter: set[tuple[str, str, str]] | None = None,
-    fl: FLList | None = None,
-) -> IndexSet:
-    """Build every §3 index over ``store``.
+class _RowAccumulator:
+    """Per-document §3 row generation.
 
-    ``triple_key_filter`` restricts the (f,s,t) build to a key subset —
-    used by large-corpus benchmarks to bound build time exactly like an
-    on-demand index materialization would.  ``fl`` overrides the FL-list
-    (document shards must share the corpus-global lemma typing — in
-    production the FL-list is a corpus-level reduce broadcast to builders).
+    The unit of construction is ONE document: ``add_document`` appends every
+    row the document contributes to every index, and ``finalize`` sorts/packs
+    the accumulated rows into an immutable :class:`IndexSet`.  Whole-corpus
+    builds (``build_indexes``) and incremental segment builds
+    (``build_segment``, used by ``index/incremental.py``) share this code, so
+    a segment over a document batch is byte-identical to the corresponding
+    slice of a full rebuild.
     """
-    if fl is None:
-        freq = store.lemma_frequencies()
-        fl = FLList.from_frequencies(freq, sw_count=sw_count, fu_count=fu_count)
-    D = max_distance
 
-    ordinary_rows: dict[str, list[tuple[int, int]]] = {}
-    pair_rows: dict[tuple[str, str], list[tuple[int, int, int]]] = {}
-    triple_rows: dict[tuple[str, str, str], list[tuple[int, int, int, int]]] = {}
-    single_rows: dict[tuple[str], list[tuple[int, int]]] = {}
-    spair_rows: dict[tuple[str, str], list[tuple[int, int, int]]] = {}
-    nsw_raw: dict[str, list[list[tuple[int, int]]]] = {}
+    def __init__(
+        self,
+        fl: FLList,
+        max_distance: int,
+        build_pair: bool = True,
+        build_degenerate: bool = True,
+        triple_key_filter: set[tuple[str, str, str]] | None = None,
+    ):
+        self.fl = fl
+        self.max_distance = max_distance
+        self.build_pair = build_pair
+        self.build_degenerate = build_degenerate
+        self.triple_key_filter = triple_key_filter
+        self.ordinary_rows: dict[str, list[tuple[int, int]]] = {}
+        self.pair_rows: dict[tuple[str, str], list[tuple[int, int, int]]] = {}
+        self.triple_rows: dict[tuple[str, str, str], list[tuple[int, int, int, int]]] = {}
+        self.single_rows: dict[tuple[str], list[tuple[int, int]]] = {}
+        self.spair_rows: dict[tuple[str, str], list[tuple[int, int, int]]] = {}
+        self.nsw_raw: dict[str, list[list[tuple[int, int]]]] = {}
 
-    for doc in store.documents:
+    def add_document(self, doc) -> None:
+        fl = self.fl
+        D = self.max_distance
+        build_pair = self.build_pair
+        build_degenerate = self.build_degenerate
+        triple_key_filter = self.triple_key_filter
+        ordinary_rows = self.ordinary_rows
+        pair_rows = self.pair_rows
+        triple_rows = self.triple_rows
+        single_rows = self.single_rows
+        spair_rows = self.spair_rows
+        nsw_raw = self.nsw_raw
         # occurrence list: (pos, lemma) for every lemma of every position
         occ: list[tuple[int, str]] = []
         for pos, lemmas in enumerate(doc.lemma_stream):
@@ -221,37 +234,97 @@ def build_indexes(
                         (doc.doc_id, pi, pj - pi, pk - pi)
                     )
 
-    ordinary = {l: _sorted_rows(r, 2) for l, r in ordinary_rows.items()}
+    def finalize(self, n_docs: int) -> IndexSet:
+        ordinary = {l: _sorted_rows(r, 2) for l, r in self.ordinary_rows.items()}
 
-    # pack NSW records aligned with the *sorted* ordinary posting order
-    nsw: dict[str, NSWRecords] = {}
-    for l, per_posting in nsw_raw.items():
-        rows = ordinary_rows[l]
-        order = np.lexsort(
-            (np.asarray([p for _, p in rows]), np.asarray([d for d, _ in rows]))
-        )
-        offsets = [0]
-        stop_l: list[int] = []
-        dist: list[int] = []
-        for idx in order:
-            for sl, dd in per_posting[idx]:
-                stop_l.append(sl)
-                dist.append(dd)
-            offsets.append(len(stop_l))
-        nsw[l] = NSWRecords(
-            offsets=np.asarray(offsets, dtype=np.int64),
-            stop_lemma=np.asarray(stop_l, dtype=np.int32),
-            distance=np.asarray(dist, dtype=np.int32),
+        # pack NSW records aligned with the *sorted* ordinary posting order
+        nsw: dict[str, NSWRecords] = {}
+        for l, per_posting in self.nsw_raw.items():
+            rows = self.ordinary_rows[l]
+            order = np.lexsort(
+                (np.asarray([p for _, p in rows]), np.asarray([d for d, _ in rows]))
+            )
+            offsets = [0]
+            stop_l: list[int] = []
+            dist: list[int] = []
+            for idx in order:
+                for sl, dd in per_posting[idx]:
+                    stop_l.append(sl)
+                    dist.append(dd)
+                offsets.append(len(stop_l))
+            nsw[l] = NSWRecords(
+                offsets=np.asarray(offsets, dtype=np.int64),
+                stop_lemma=np.asarray(stop_l, dtype=np.int32),
+                distance=np.asarray(dist, dtype=np.int32),
+            )
+
+        return IndexSet(
+            fl=self.fl,
+            max_distance=self.max_distance,
+            ordinary=ordinary,
+            nsw=nsw,
+            pair={k: _sorted_rows(r, 3) for k, r in self.pair_rows.items()},
+            triple={k: _sorted_rows(r, 4) for k, r in self.triple_rows.items()},
+            stop_single={k: _sorted_rows(r, 2) for k, r in self.single_rows.items()},
+            stop_pair={k: _sorted_rows(r, 3) for k, r in self.spair_rows.items()},
+            n_docs=n_docs,
         )
 
-    return IndexSet(
-        fl=fl,
-        max_distance=D,
-        ordinary=ordinary,
-        nsw=nsw,
-        pair={k: _sorted_rows(r, 3) for k, r in pair_rows.items()},
-        triple={k: _sorted_rows(r, 4) for k, r in triple_rows.items()},
-        stop_single={k: _sorted_rows(r, 2) for k, r in single_rows.items()},
-        stop_pair={k: _sorted_rows(r, 3) for k, r in spair_rows.items()},
-        n_docs=len(store),
+
+def build_indexes(
+    store: DocumentStore,
+    sw_count: int,
+    fu_count: int,
+    max_distance: int = 5,
+    build_pair: bool = True,
+    build_degenerate: bool = True,
+    triple_key_filter: set[tuple[str, str, str]] | None = None,
+    fl: FLList | None = None,
+) -> IndexSet:
+    """Build every §3 index over ``store``.
+
+    ``triple_key_filter`` restricts the (f,s,t) build to a key subset —
+    used by large-corpus benchmarks to bound build time exactly like an
+    on-demand index materialization would.  ``fl`` overrides the FL-list
+    (document shards must share the corpus-global lemma typing — in
+    production the FL-list is a corpus-level reduce broadcast to builders).
+    """
+    if fl is None:
+        freq = store.lemma_frequencies()
+        fl = FLList.from_frequencies(freq, sw_count=sw_count, fu_count=fu_count)
+    return build_segment(
+        store.documents,
+        fl,
+        max_distance=max_distance,
+        build_pair=build_pair,
+        build_degenerate=build_degenerate,
+        triple_key_filter=triple_key_filter,
     )
+
+
+def build_segment(
+    documents: Sequence,
+    fl: FLList,
+    max_distance: int = 5,
+    build_pair: bool = True,
+    build_degenerate: bool = True,
+    triple_key_filter: set[tuple[str, str, str]] | None = None,
+) -> IndexSet:
+    """Build one immutable sorted segment over a document batch.
+
+    This is the incremental-construction unit (``index/incremental.py``): a
+    segment is a complete §3 ``IndexSet`` over its batch, and because row
+    generation is per-document, a segment's per-document content is
+    byte-identical to a whole-corpus rebuild's — k-way segment merges can
+    therefore reproduce a from-scratch build exactly.
+    """
+    acc = _RowAccumulator(
+        fl,
+        max_distance,
+        build_pair=build_pair,
+        build_degenerate=build_degenerate,
+        triple_key_filter=triple_key_filter,
+    )
+    for doc in documents:
+        acc.add_document(doc)
+    return acc.finalize(n_docs=len(documents))

@@ -85,6 +85,22 @@ class DocumentStore:
         ]
         return cls(documents=docs, lemmatizer=lem)
 
+    @classmethod
+    def from_documents(
+        cls, documents: Iterable[Document], lemmatizer: Lemmatizer | None = None
+    ) -> "DocumentStore":
+        """Wrap already-lemmatized documents (doc ids preserved) — the
+        rebuild corpus of the incremental indexer's differential checks."""
+        return cls(documents=list(documents), lemmatizer=lemmatizer or Lemmatizer())
+
+    def subset(self, doc_ids: Iterable[int]) -> "DocumentStore":
+        """Store restricted to ``doc_ids`` (original ids and order kept)."""
+        keep = set(doc_ids)
+        return DocumentStore(
+            documents=[d for d in self.documents if d.doc_id in keep],
+            lemmatizer=self.lemmatizer,
+        )
+
     def __len__(self) -> int:
         return len(self.documents)
 

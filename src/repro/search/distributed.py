@@ -59,6 +59,14 @@ class ShardedSearchService:
     global FL-list (lemma typing must agree across shards — in production
     the FL-list is computed by a corpus-level reduce and broadcast; here we
     compute it once over the full store).
+
+    With ``incremental=True`` every shard is an ``IncrementalIndexer``: the
+    serving loop reads each shard's live multi-segment view, and the service
+    grows mutation endpoints — ``add_documents`` routes new docs to shards,
+    ``delete_document`` tombstones, ``commit`` runs the corpus-level FL
+    reduce and broadcasts ONE new FL-list to every shard's generation commit
+    (canonical key order must agree across shards), ``compact`` merges
+    per-shard segments under a memory budget.
     """
 
     def __init__(
@@ -71,6 +79,7 @@ class ShardedSearchService:
         algorithm: str = "se2.4",
         use_kernel: bool = False,
         doc_len: int = 512,
+        incremental: bool = False,
     ):
         from ..core.lemma import FLList
 
@@ -79,16 +88,110 @@ class ShardedSearchService:
         self.doc_len = doc_len
         self.max_distance = max_distance
         self.n_shards = n_shards
+        self.sw_count = sw_count
+        self.fu_count = fu_count
+        self.lemmatizer = store.lemmatizer
+        self.indexers = None
+        self._static_shards: list[IndexSet] = []
+        if incremental:
+            from ..index.incremental import IncrementalIndexer
+
+            self.indexers = [
+                IncrementalIndexer(
+                    sw_count=sw_count,
+                    fu_count=fu_count,
+                    max_distance=max_distance,
+                    lemmatizer=store.lemmatizer,
+                )
+                for _ in range(n_shards)
+            ]
+            self._next_doc_id = 1 + max(
+                (doc.doc_id for doc in store.documents), default=-1
+            )
+            # the store's documents are already lemmatized: ingest the
+            # per-shard batches as-is, no re-lemmatization
+            for shard_id, sub in enumerate(shard_documents(store, n_shards)):
+                self.indexers[shard_id].add_prelemmatized(sub.documents)
+            self.commit()
+            return
         global_freq = store.lemma_frequencies()
         self.fl = FLList.from_frequencies(global_freq, sw_count=sw_count, fu_count=fu_count)
-        self.shards: list[IndexSet] = []
         for sub in shard_documents(store, n_shards):
             # every shard indexes with the GLOBAL FL-list (lemma typing and
             # canonical key order must agree across shards)
             idx = build_indexes(sub, sw_count=sw_count, fu_count=fu_count,
                                 max_distance=max_distance, fl=self.fl)
-            self.shards.append(idx)
-        self.lemmatizer = store.lemmatizer
+            self._static_shards.append(idx)
+
+    @property
+    def shards(self) -> list[IndexSet]:
+        """Live per-shard index views (static builds or segment unions)."""
+        if self.indexers is not None:
+            return [ix.index for ix in self.indexers]
+        return self._static_shards
+
+    # ---- incremental mutation endpoints -----------------------------------
+
+    def add_documents(self, texts: Sequence[str]) -> list[int]:
+        """Route new documents to shards (round-robin on global doc id);
+        they become searchable at the next ``commit``."""
+        self._require_incremental()
+        per_shard: dict[int, tuple[list[str], list[int]]] = {}
+        out = []
+        for text in texts:
+            doc_id = self._next_doc_id
+            self._next_doc_id += 1
+            batch = per_shard.setdefault(doc_id % self.n_shards, ([], []))
+            batch[0].append(text)
+            batch[1].append(doc_id)
+            out.append(doc_id)
+        for shard_id, (shard_texts, ids) in per_shard.items():
+            self.indexers[shard_id].add_documents(shard_texts, doc_ids=ids)
+        return out
+
+    def delete_document(self, doc_id: int) -> None:
+        """Tombstone on the owning shard — effective immediately."""
+        self._require_incremental()
+        self.indexers[doc_id % self.n_shards].delete_document(doc_id)
+
+    def commit(self) -> dict:
+        """Corpus-level FL reduce + broadcast generation commit.
+
+        The global FL-list is recomputed over every shard's surviving
+        frequencies and pinned into each shard's commit, so per-shard FL
+        drift re-keying happens against ONE shared lemma typing.
+        """
+        self._require_incremental()
+        from ..core.lemma import FLList
+
+        global_freq: dict[str, int] = {}
+        for ix in self.indexers:
+            for l, n in ix.surviving_frequencies().items():
+                global_freq[l] = global_freq.get(l, 0) + n
+        self.fl = FLList.from_frequencies(
+            global_freq, sw_count=self.sw_count, fu_count=self.fu_count
+        )
+        reports = [ix.commit(fl=self.fl) for ix in self.indexers]
+        return {
+            "new_docs": sum(r["new_docs"] for r in reports),
+            "rekeyed_docs": sum(r["rekeyed_docs"] for r in reports),
+            "segments": sum(r["segments"] for r in reports),
+        }
+
+    def compact(self, memory_budget_bytes: int | None = None) -> dict:
+        self._require_incremental()
+        reports = [ix.compact(memory_budget_bytes) for ix in self.indexers]
+        return {
+            "segments": sum(r["segments"] for r in reports),
+            "collected": sum(r["collected"] for r in reports),
+        }
+
+    def _require_incremental(self) -> None:
+        if self.indexers is None:
+            raise RuntimeError(
+                "service was built with incremental=False; mutation endpoints "
+                "need ShardedSearchService(..., incremental=True)"
+            )
 
     def search(
         self, query: str, top_k: int = 10, dead_shards: Sequence[int] = ()

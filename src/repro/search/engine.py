@@ -71,19 +71,28 @@ class SearchEngine:
     ):
         if algorithm != "fused" and algorithm not in ALGORITHMS:
             raise KeyError(algorithm)
-        self.index = index
+        # ``index`` may be a plain IndexSet or an IncrementalIndexer; the
+        # live multi-segment view is resolved per call, so commits, deletes
+        # and compactions are picked up without rebuilding the engine.
+        self._index_source = index
         self.lemmatizer = lemmatizer or Lemmatizer()
         self.algorithm = algorithm
         self.use_kernel = use_kernel
         self.doc_len = doc_len
         self._vec = None
 
+    @property
+    def index(self) -> IndexSet:
+        from ..index.incremental import as_index_set
+
+        return as_index_set(self._index_source)
+
     def _vectorized(self):
         if self._vec is None:
             from .vectorized import VectorizedEngine
 
             self._vec = VectorizedEngine(
-                self.index, use_kernel=self.use_kernel, doc_len=self.doc_len
+                self._index_source, use_kernel=self.use_kernel, doc_len=self.doc_len
             )
         return self._vec
 

@@ -185,8 +185,15 @@ def extract_segment_events(
     Returns ``None`` for an empty subquery (no key events, or the Step-1
     candidate intersection is empty) so callers short-circuit instead of
     dispatching an all-padding batch; the skip is counted in
-    ``QueryStats.empty_subqueries``.
+    ``QueryStats.empty_subqueries``.  An index with no live documents (an
+    empty shard, or a multi-segment view whose docs are all tombstoned)
+    short-circuits before any key-posting lookup — segment-union merges are
+    never forced for work items that cannot contribute candidates.
     """
+    if index.n_docs == 0:
+        if stats is not None:
+            stats.empty_subqueries += 1
+        return None
     keys = list(keys) if keys is not None else select_keys(subquery, index.fl)
     lemmas = subquery.unique_lemmas()
     lid = {l: i for i, l in enumerate(lemmas)}

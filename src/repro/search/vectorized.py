@@ -91,10 +91,17 @@ class VectorizedEngine:
         doc_len: int = 512,
         compute_dtype: str = "uint8",
     ):
-        self.index = index
+        # plain IndexSet or IncrementalIndexer (live view resolved per call)
+        self._index_source = index
         self.use_kernel = use_kernel
         self.doc_len = doc_len
         self.compute_dtype = compute_dtype
+
+    @property
+    def index(self) -> IndexSet:
+        from ..index.incremental import as_index_set
+
+        return as_index_set(self._index_source)
 
     def search_query_batch(
         self,

@@ -1,0 +1,134 @@
+"""Generation strategies for the differential property-test harness.
+
+Works with the real ``hypothesis`` package AND the fixed-seed shim in
+``tests/_hypothesis_compat.py``: every strategy draws a single integer seed
+and the generators below expand it deterministically with numpy — so runs
+are reproducible under both engines, and under real hypothesis the seed
+still shrinks to a minimal failing example.
+
+Corpora are Zipf-shaped with a forced stop/FU/ordinary mix (a function-word
+head reused from the corpus module, a mid-frequency band, a long tail),
+document lengths 1–200, plus injected paper phrases so multi-lemma query
+words ("are" -> are/be) and duplicate-lemma queries have non-trivial result
+sets.  Queries are k=1..5 words drawn from the corpus vocabulary with
+deliberate duplicates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from tests._hypothesis_compat import st
+
+# one strategy: an integer seed, expanded by the builders below
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+_HEAD = (
+    "the", "be", "to", "of", "and", "a", "in", "that", "you", "who",
+    "it", "for", "not", "on", "is", "are", "what", "do", "this", "at",
+)
+_PHRASES = (
+    "who are you who",
+    "to be or not to be",
+    "the who are an english rock band",
+    "time and time again",
+    "what do you do all day",
+)
+
+
+@dataclass
+class CorpusSpec:
+    """A drawn corpus + index configuration."""
+
+    texts: list[str]
+    sw_count: int
+    fu_count: int
+    max_distance: int
+    vocab: list[str]
+
+
+def make_corpus(seed: int, max_docs: int = 14) -> CorpusSpec:
+    """Deterministically expand ``seed`` into a corpus spec.
+
+    Doc lengths span 1–200; the stop/FU boundary is drawn so the same lemma
+    population lands in different frequency classes across seeds (stop-heavy,
+    FU-heavy and ordinary-heavy corpora all occur).
+    """
+    rng = np.random.default_rng(seed)
+    n_docs = int(rng.integers(2, max_docs + 1))
+    n_tail = int(rng.integers(5, 40))
+    vocab = list(_HEAD) + [f"w{j:03d}" for j in range(n_tail)]
+    ranks = np.arange(1, len(vocab) + 1, dtype=np.float64)
+    probs = ranks ** -float(rng.uniform(0.9, 1.6))
+    probs /= probs.sum()
+
+    texts: list[str] = []
+    for _ in range(n_docs):
+        doc_len = int(rng.integers(1, 201))
+        words = [vocab[int(k)] for k in rng.choice(len(vocab), size=doc_len, p=probs)]
+        if doc_len > 4 and rng.random() < 0.7:
+            phrase = _PHRASES[int(rng.integers(len(_PHRASES)))].split()
+            at = int(rng.integers(0, doc_len - 1))
+            words[at:at] = phrase
+        texts.append(" ".join(words))
+
+    # forced class mixes: boundaries drawn over the realized lemma count
+    sw_count = int(rng.integers(3, 25))
+    fu_count = int(rng.integers(3, 30))
+    max_distance = int(rng.choice([3, 5, 7]))
+    return CorpusSpec(
+        texts=texts,
+        sw_count=sw_count,
+        fu_count=fu_count,
+        max_distance=max_distance,
+        vocab=vocab,
+    )
+
+
+def make_queries(seed: int, spec: CorpusSpec, n_queries: int = 4) -> list[str]:
+    """k=1..5-word queries over the corpus vocabulary, duplicates included."""
+    rng = np.random.default_rng(seed + 0x9E3779B9)
+    queries: list[str] = []
+    for _ in range(n_queries):
+        k = int(rng.integers(1, 6))
+        words: list[str] = []
+        for _ in range(k):
+            if words and rng.random() < 0.3:
+                words.append(words[int(rng.integers(len(words)))])  # duplicate
+            elif rng.random() < 0.7:
+                words.append(_HEAD[int(rng.integers(len(_HEAD)))])
+            else:
+                words.append(spec.vocab[int(rng.integers(len(spec.vocab)))])
+        queries.append(" ".join(words))
+    return queries
+
+
+@dataclass
+class OpSequence:
+    """A randomized add/delete/compact schedule for the incremental tests."""
+
+    batches: list[list[str]]  # texts per ingest batch
+    # ops[i] runs AFTER batch i commits: ("delete", frac) / ("compact", budget)
+    ops: list[list[tuple]]
+
+
+def make_op_sequence(seed: int, spec: CorpusSpec) -> OpSequence:
+    rng = np.random.default_rng(seed ^ 0x5DEECE66D)
+    texts = list(spec.texts)
+    n_batches = int(rng.integers(2, 5))
+    cuts = sorted(rng.choice(np.arange(1, len(texts)), size=min(n_batches - 1, len(texts) - 1), replace=False).tolist()) if len(texts) > 1 else []
+    batches, prev = [], 0
+    for c in cuts + [len(texts)]:
+        batches.append(texts[prev:c])
+        prev = c
+    ops: list[list[tuple]] = []
+    for _ in batches:
+        step: list[tuple] = []
+        if rng.random() < 0.6:
+            step.append(("delete", float(rng.uniform(0.05, 0.4))))
+        if rng.random() < 0.4:
+            step.append(("compact", int(rng.integers(20_000, 300_000))))
+        ops.append(step)
+    return OpSequence(batches=batches, ops=ops)

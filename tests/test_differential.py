@@ -1,0 +1,179 @@
+"""Differential property-test harness.
+
+Pins the two contracts every engine-level refactor must preserve:
+
+1. **Engine equivalence** — for random corpora and k-word queries (duplicate
+   lemmas included), the §10 oracle, the scalar SE2.4 Combiner, the
+   vectorized engine and the fused batched pipeline (and its Pallas-kernel
+   path) return the SAME fragment sets.
+
+2. **Incremental == rebuild** — after randomized add/delete/compact
+   sequences, the multi-segment incremental index is byte-identical
+   (``index_sets_equal``) to a from-scratch ``build_indexes`` over the
+   surviving documents, and searching it returns byte-identical fragments
+   across all engines.
+
+Runs under real ``hypothesis`` (fixed seed via ``derandomize``) or the
+deterministic shim — both bounded to a small example budget for CI.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+from tests.strategies import make_corpus, make_op_sequence, make_queries, seeds
+
+from repro.core.combiner import se24_combiner
+from repro.core.keys import expand_subqueries, select_keys
+from repro.core.oracle import oracle_search
+from repro.index import DocumentStore, IncrementalIndexer, build_indexes, index_sets_equal
+from repro.search.engine import SearchEngine
+from repro.search.vectorized import VectorizedEngine
+
+
+def _frag_set(results):
+    return {(r.doc_id, r.start, r.end) for r in results}
+
+
+def _response_frags(resp):
+    return sorted((d.doc_id, f.start, f.end) for d in resp.docs for f in d.fragments)
+
+
+def _oracle_subquery(sub, index):
+    keys = select_keys(sub, index.fl)
+    postings = {k: index.key_postings(k.components) for k in keys}
+    return oracle_search(sub, keys, postings, index.max_distance)
+
+
+# ---------------------------------------------------------------------------
+# 1. engine equivalence: oracle == SE2.4 == vectorized == fused (== kernel)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(seeds)
+def test_engines_match_oracle(seed):
+    spec = make_corpus(seed)
+    store = DocumentStore.from_texts(spec.texts)
+    index = build_indexes(
+        store,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+    )
+    vec = VectorizedEngine(index)
+    fused = SearchEngine(index, lemmatizer=store.lemmatizer, algorithm="fused")
+    for query in make_queries(seed, spec, n_queries=3):
+        subqueries = expand_subqueries(query, store.lemmatizer)
+        oracle_union = set()
+        for sub in subqueries:
+            oracle = _frag_set(_oracle_subquery(sub, index))
+            scalar, _ = se24_combiner(sub, index)
+            assert _frag_set(scalar) == oracle, (query, sub, "se2.4 != oracle")
+            vec_res, _ = vec.search_subquery(sub)
+            assert _frag_set(vec_res) == oracle, (query, sub, "vectorized != oracle")
+            oracle_union |= oracle
+        resp = fused.search(query, top_k=32)
+        assert set(_response_frags(resp)) == oracle_union, (query, "fused != oracle")
+
+
+@settings(max_examples=3, deadline=None, derandomize=True)
+@given(seeds)
+def test_kernel_engine_matches_oracle(seed):
+    """The Pallas window-kernel path (dense on-device occupancy) against the
+    oracle — fewer examples, it runs the kernel in interpret mode on CPU."""
+    spec = make_corpus(seed, max_docs=8)
+    store = DocumentStore.from_texts(spec.texts)
+    index = build_indexes(
+        store,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+    )
+    kern = SearchEngine(
+        index, lemmatizer=store.lemmatizer, algorithm="fused", use_kernel=True
+    )
+    for query in make_queries(seed, spec, n_queries=2):
+        subqueries = expand_subqueries(query, store.lemmatizer)
+        oracle_union = set()
+        for sub in subqueries:
+            oracle_union |= _frag_set(_oracle_subquery(sub, index))
+        resp = kern.search(query, top_k=32)
+        assert set(_response_frags(resp)) == oracle_union, (query, "kernel != oracle")
+
+
+# ---------------------------------------------------------------------------
+# 2. incremental multi-segment index == from-scratch rebuild
+# ---------------------------------------------------------------------------
+
+
+def _run_ops(spec, ops_seed):
+    seq = make_op_sequence(ops_seed, spec)
+    ix = IncrementalIndexer(
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+    )
+    rng = np.random.default_rng(ops_seed)
+    live: list[int] = []
+    for batch, step in zip(seq.batches, seq.ops):
+        live += ix.add_documents(batch)
+        ix.commit()
+        for op in step:
+            if op[0] == "delete" and live:
+                n_del = max(1, int(len(live) * op[1]))
+                for _ in range(n_del):
+                    victim = live.pop(int(rng.integers(len(live))))
+                    ix.delete_document(victim)
+            elif op[0] == "compact":
+                ix.compact(memory_budget_bytes=op[1])
+    ix.commit()
+    return ix
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(seeds)
+def test_incremental_matches_rebuild(seed):
+    spec = make_corpus(seed)
+    ix = _run_ops(spec, seed)
+    equal, why = index_sets_equal(ix.index.to_index_set(), ix.rebuild_index_set())
+    assert equal, why
+    # and after a full compaction (single rewritten segment, tombstones GC'd)
+    ix.compact()
+    assert len(ix.segments) <= 1
+    assert not ix.tombstones
+    equal, why = index_sets_equal(ix.index.to_index_set(), ix.rebuild_index_set())
+    assert equal, f"post-compact: {why}"
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seeds)
+def test_incremental_serving_matches_rebuild_all_engines(seed):
+    """Searching the live multi-segment view returns byte-identical fragments
+    to a rebuilt index, across scalar SE2.4, vectorized, fused and kernel."""
+    spec = make_corpus(seed, max_docs=8)
+    ix = _run_ops(spec, seed)
+    store = ix.surviving_store()
+    rebuild = ix.rebuild_index_set()
+    queries = make_queries(seed, spec, n_queries=2)
+    for query in queries:
+        subqueries = expand_subqueries(query, store.lemmatizer)
+        for sub in subqueries:
+            a, _ = se24_combiner(sub, ix.index)
+            b, _ = se24_combiner(sub, rebuild)
+            assert _frag_set(a) == _frag_set(b), (query, sub, "se2.4 view != rebuild")
+            va, _ = VectorizedEngine(ix).search_subquery(sub)
+            assert _frag_set(va) == _frag_set(b), (query, sub, "vectorized view != rebuild")
+        for use_kernel in (False, True):
+            ra = SearchEngine(
+                ix, lemmatizer=store.lemmatizer, algorithm="fused", use_kernel=use_kernel
+            ).search(query, top_k=32)
+            rb = SearchEngine(
+                rebuild, lemmatizer=store.lemmatizer, algorithm="fused", use_kernel=use_kernel
+            ).search(query, top_k=32)
+            assert _response_frags(ra) == _response_frags(rb), (
+                query,
+                f"fused(kernel={use_kernel}) view != rebuild",
+            )

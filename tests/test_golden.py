@@ -1,0 +1,128 @@
+"""Golden regression fixtures: the paper's worked examples as hand-checked
+literals, so refactors cannot silently drift from the paper's semantics.
+
+* §3  — the (be, who, who) three-component records over the example
+        documents D0/D1, pinned as an EXACT set (not a superset check).
+* §3  — the "you are who" record under a pinned FL order.
+* §10.1–10.2 — the Lemma-table sweep on explicit event streams: capped
+        per-lemma counts, shrink-from-the-left, duplicate-lemma
+        multiplicities ("to be or not to be").
+* end-to-end — engine fragment literals for the paper's running queries
+        over D0/D1, identical across scalar SE2.4, vectorized and fused.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.keys import Subquery, expand_subqueries
+from repro.core.oracle import sweep_events
+from repro.index import DocumentStore, PAPER_EXAMPLE_DOCS, build_indexes
+from repro.search.engine import SearchEngine
+from repro.search.vectorized import VectorizedEngine
+
+
+@pytest.fixture(scope="module")
+def golden_index():
+    # The third text pins the paper's FL order (be before who, who before
+    # you) without adding any (be, who, who) postings — it contains no "who".
+    texts = list(PAPER_EXAMPLE_DOCS) + ["is is is is is is"]
+    store = DocumentStore.from_texts(texts)
+    index = build_indexes(store, sw_count=10_000, fu_count=0, max_distance=5)
+    return store, index
+
+
+# ---------------------------------------------------------------------------
+# §3 record sets
+# ---------------------------------------------------------------------------
+
+
+def test_golden_be_who_who_records_exact(golden_index):
+    """The paper's §3 worked example, exactly: D0 = "Who are you is the
+    album by The Who", D1 = "Who has reality, who is real, who is true"
+    produce exactly these five (ID, P, D1, D2) records for (be, who, who)."""
+    store, index = golden_index
+    fl = index.fl
+    assert fl.number("be") < fl.number("who")  # the paper's FL order
+    key = tuple(sorted(["be", "who", "who"], key=fl.number))
+    rows = {tuple(int(x) for x in r) for r in index.key_postings(key)}
+    assert rows == {
+        (0, 3, -3, 5),
+        (1, 4, -4, -1),
+        (1, 4, -4, 2),
+        (1, 4, -1, 2),
+        (1, 7, -4, -1),
+    }
+    # s == t: the (d1, d2) pairs enumerate unordered distinct occurrences
+    for _, _, d1, d2 in rows:
+        assert d1 < d2
+
+
+def test_golden_who_are_you_record(golden_index):
+    """§3's "you are who" example record, canonicalized under this corpus'
+    FL order (who < are < you): one record anchored at who@0 in D0."""
+    store, index = golden_index
+    fl = index.fl
+    key = tuple(sorted(["you", "are", "who"], key=fl.number))
+    assert key == ("who", "are", "you")
+    assert [tuple(int(x) for x in r) for r in index.key_postings(key)] == [(0, 0, 1, 2)]
+
+
+# ---------------------------------------------------------------------------
+# §10.1–10.2 Lemma-table sweep
+# ---------------------------------------------------------------------------
+
+
+def test_golden_sweep_duplicate_multiplicities():
+    """"to be or not to be": every lemma must meet its multiplicity (to=2,
+    be=2, or=1, not=1); the only minimal covering fragment is [0..5]."""
+    events = [(0, "to"), (1, "be"), (2, "or"), (3, "not"), (4, "to"), (5, "be")]
+    out = sweep_events(7, events, {"to": 2, "be": 2, "or": 1, "not": 1}, max_span=10)
+    assert [(r.doc_id, r.start, r.end) for r in out] == [(7, 0, 5)]
+
+
+def test_golden_sweep_shrinks_from_left():
+    """D0's event stream for [who][be][you]: the sweep emits at every
+    covering position after dropping over-counted front lemmas —
+    (0,2) on completion, (0,3) when the extra 'be' arrives (front 'who' is
+    not over-counted), and (2,8) after both 'who'@0 and 'be'@1 are shed."""
+    events = [(0, "who"), (1, "be"), (2, "you"), (3, "be"), (8, "who")]
+    out = sweep_events(0, events, {"who": 1, "be": 1, "you": 1}, max_span=10)
+    assert [(r.doc_id, r.start, r.end) for r in out] == [(0, 0, 2), (0, 0, 3), (0, 2, 8)]
+
+
+def test_golden_sweep_respects_max_span():
+    events = [(0, "a"), (1, "b"), (20, "a"), (21, "b")]
+    out = sweep_events(1, events, {"a": 1, "b": 1}, max_span=4)
+    assert [(r.start, r.end) for r in out] == [(0, 1), (20, 21)]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end engine literals over the paper documents
+# ---------------------------------------------------------------------------
+
+GOLDEN_QUERY_FRAGMENTS = {
+    # "who are you": subqueries [who][are][you] + [who][be][you]; fragments
+    # are key-derivable events only (the (who@8, are@1, you@2) combination
+    # exceeds MaxDistance from any anchor and is correctly absent).
+    "who are you": [(0, 0, 2), (0, 0, 3), (0, 2, 8)],
+    # "who are you who": who must occur twice -> the single minimal fragment
+    # spans the whole of D0.
+    "who are you who": [(0, 0, 8)],
+}
+
+
+@pytest.mark.parametrize("query,expected", sorted(GOLDEN_QUERY_FRAGMENTS.items()))
+def test_golden_engine_fragments(golden_index, query, expected):
+    store, index = golden_index
+    for algorithm in ("se2.4", "fused"):
+        resp = SearchEngine(index, lemmatizer=store.lemmatizer, algorithm=algorithm).search(
+            query, top_k=10
+        )
+        frags = sorted((d.doc_id, f.start, f.end) for d in resp.docs for f in d.fragments)
+        assert frags == expected, (query, algorithm)
+    vec = VectorizedEngine(index)
+    union = set()
+    for sub in expand_subqueries(query, store.lemmatizer):
+        res, _ = vec.search_subquery(sub)
+        union |= {(r.doc_id, r.start, r.end) for r in res}
+    assert sorted(union) == expected, (query, "vectorized")

@@ -1,0 +1,225 @@
+"""Unit tests for the incremental segmented indexing subsystem."""
+
+import numpy as np
+import pytest
+
+from repro.core.lemma import LemmaType
+from repro.index import (
+    DocumentStore,
+    IncrementalIndexer,
+    build_indexes,
+    index_sets_equal,
+    synthesize_corpus,
+)
+from repro.index.incremental import merge_posting_arrays
+from repro.search.distributed import ShardedSearchService
+from repro.search.engine import SearchEngine
+
+SW, FU, D = 40, 80, 5
+
+
+def _texts(n=24, seed=11):
+    store = synthesize_corpus(n_docs=n, doc_len=50, vocab_size=250, seed=seed)
+    return [d.text for d in store.documents], store.lemmatizer
+
+
+def _assert_equal_rebuild(ix, ctx=""):
+    equal, why = index_sets_equal(ix.index.to_index_set(), ix.rebuild_index_set())
+    assert equal, f"{ctx}: {why}"
+
+
+def test_single_commit_equals_full_build():
+    texts, lem = _texts()
+    ix = IncrementalIndexer(sw_count=SW, fu_count=FU, max_distance=D, lemmatizer=lem)
+    ix.add_documents(texts)
+    report = ix.commit()
+    assert report["new_docs"] == len(texts) and report["segments"] == 1
+    _assert_equal_rebuild(ix, "single commit")
+
+
+def test_multi_batch_commits_with_fl_drift():
+    texts, lem = _texts()
+    ix = IncrementalIndexer(sw_count=SW, fu_count=FU, max_distance=D, lemmatizer=lem)
+    drifted = 0
+    for i in range(0, len(texts), 6):
+        ix.add_documents(texts[i : i + 6])
+        drifted += ix.commit()["rekeyed_docs"]
+    assert len(ix.segments) == len(range(0, len(texts), 6))
+    assert drifted > 0  # Zipf growth must move lemmas across classes
+    _assert_equal_rebuild(ix, "multi batch")
+
+
+def test_delete_is_immediately_visible_then_exact_after_commit():
+    texts, lem = _texts()
+    ix = IncrementalIndexer(sw_count=SW, fu_count=FU, max_distance=D, lemmatizer=lem)
+    ids = ix.add_documents(texts)
+    ix.commit()
+    victim = ids[3]
+    before = {int(r[0]) for a in (ix.index.ordinary[l] for l in ix.index.ordinary) for r in a}
+    assert victim in before
+    ix.delete_document(victim)
+    # tombstone filter: no posting of any index references the victim
+    view = ix.index
+    for mapping in (view.ordinary, view.pair, view.triple, view.stop_single, view.stop_pair):
+        for key in mapping:
+            rows = mapping[key]
+            assert victim not in set(rows[:, 0].tolist())
+    ix.commit()  # FL refresh over the survivors
+    _assert_equal_rebuild(ix, "after delete")
+
+
+def test_delete_unknown_raises_and_buffered_delete_unbuffers():
+    texts, lem = _texts(n=4)
+    ix = IncrementalIndexer(sw_count=SW, fu_count=FU, lemmatizer=lem)
+    with pytest.raises(KeyError):
+        ix.delete_document(99)
+    ids = ix.add_documents(texts)
+    ix.delete_document(ids[0])  # still buffered: dropped, never indexed
+    ix.commit()
+    assert ids[0] not in ix.documents and ids[0] not in ix.tombstones
+    _assert_equal_rebuild(ix, "buffered delete")
+
+
+def test_compact_budget_bounds_segments_and_collects_tombstones():
+    texts, lem = _texts()
+    ix = IncrementalIndexer(sw_count=SW, fu_count=FU, max_distance=D, lemmatizer=lem)
+    for i in range(0, len(texts), 4):
+        ix.add_documents(texts[i : i + 4])
+        ix.commit()
+    n_before = len(ix.segments)
+    ids = sorted(ix.documents)
+    for victim in ids[::5]:
+        ix.delete_document(victim)
+    total = sum(seg.live_bytes() for seg in ix.segments)
+    report = ix.compact(memory_budget_bytes=total // 2 + 1)
+    assert 1 < report["segments"] < n_before  # budget forced multiple outputs
+    assert report["collected"] == len(ids[::5])
+    assert not ix.tombstones
+    ix.commit()
+    _assert_equal_rebuild(ix, "budgeted compact")
+    ix.compact()
+    assert len(ix.segments) == 1
+    _assert_equal_rebuild(ix, "full compact")
+
+
+def test_pinned_fl_mode_matches_rebuild_with_same_fl():
+    """commit(refresh_fl=False): serving mode — no drift scan; exact w.r.t. a
+    rebuild that pins the same FL-list."""
+    texts, lem = _texts()
+    ix = IncrementalIndexer(sw_count=SW, fu_count=FU, max_distance=D, lemmatizer=lem)
+    ix.add_documents(texts[:12])
+    ix.commit()  # generation 1 establishes the FL-list
+    pinned = ix.fl
+    ix.add_documents(texts[12:])
+    report = ix.commit(refresh_fl=False)
+    assert report["rekeyed_docs"] == 0 and ix.fl is pinned
+    rebuild = build_indexes(
+        ix.surviving_store(), sw_count=SW, fu_count=FU, max_distance=D, fl=pinned
+    )
+    equal, why = index_sets_equal(ix.index.to_index_set(), rebuild)
+    assert equal, why
+
+
+def test_fl_drift_rekeys_only_affected_docs():
+    """A new batch that flips one lemma's class re-keys only documents whose
+    own lemma signature changed — not the whole corpus."""
+    lem = None
+    base = ["alpha beta gamma"] * 3 + ["delta epsilon zeta"] * 3
+    ix = IncrementalIndexer(sw_count=2, fu_count=2, max_distance=D)
+    ix.add_documents(base)
+    ix.commit()
+    # flood 'zeta': it climbs into the stop class, drifting classes for the
+    # second doc group; the alpha/beta/gamma docs keep their relative order
+    ix.add_documents(["zeta " * 30])
+    report = ix.commit()
+    assert 0 < report["rekeyed_docs"] < len(base) + 1
+    _assert_equal_rebuild(ix, "class flip")
+
+
+def test_segmented_view_serves_all_key_arities(small_corpus):
+    texts = [d.text for d in small_corpus.documents]
+    ix = IncrementalIndexer(
+        sw_count=60, fu_count=150, max_distance=5, lemmatizer=small_corpus.lemmatizer
+    )
+    for i in range(0, len(texts), 17):
+        ix.add_documents(texts[i : i + 17])
+        ix.commit()
+    full = build_indexes(small_corpus, sw_count=60, fu_count=150, max_distance=5)
+    view = ix.index
+    for key in list(full.triple)[:40]:
+        assert np.array_equal(view.key_postings(key), full.key_postings(key))
+    for key in list(full.stop_pair)[:40]:
+        assert np.array_equal(view.key_postings(key), full.key_postings(key))
+    for key in list(full.stop_single)[:40]:
+        assert np.array_equal(view.key_postings(key), full.key_postings(key))
+
+
+def test_engine_picks_up_commits_live():
+    ix = IncrementalIndexer(sw_count=10, fu_count=5, max_distance=5)
+    engine = SearchEngine(ix, algorithm="se2.4")
+    assert engine.search("who are you").docs == []
+    ix.add_documents(["who are you is the album by the who"])
+    assert engine.search("who are you").docs == []  # buffered, not committed
+    ix.commit()
+    assert engine.search("who are you").docs  # same engine object, new docs
+    ix.delete_document(0)
+    assert engine.search("who are you").docs == []  # tombstone visible
+
+
+def test_materialized_snapshot_survives_fl_drift():
+    """to_index_set() snapshots may share arrays with segments (single-
+    contributor merges return originals); a later drift commit must not
+    rewrite the snapshot's NSW stop ids under its pinned FL generation."""
+    texts, lem = _texts()
+    ix = IncrementalIndexer(sw_count=SW, fu_count=FU, max_distance=D, lemmatizer=lem)
+    ix.add_documents(texts[:10])
+    ix.commit()
+    snap = ix.index.to_index_set()
+    payload = {l: r.stop_lemma.copy() for l, r in snap.nsw.items()}
+    rebuild_old = build_indexes(
+        ix.surviving_store(), sw_count=SW, fu_count=FU, max_distance=D
+    )
+    ix.add_documents(texts[10:])
+    assert ix.commit()["drifted_lemmas"] > 0  # the drift must actually occur
+    for l, before in payload.items():
+        assert np.array_equal(snap.nsw[l].stop_lemma, before), l
+    equal, why = index_sets_equal(snap, rebuild_old)
+    assert equal, why
+
+
+def test_merge_posting_arrays_order():
+    a = np.array([[0, 3], [2, 1]], dtype=np.int32)
+    b = np.array([[1, 0], [1, 9], [3, 2]], dtype=np.int32)
+    merged = merge_posting_arrays([a, b], width=2)
+    assert merged.tolist() == [[0, 3], [1, 0], [1, 9], [2, 1], [3, 2]]
+
+
+def test_sharded_incremental_service_matches_static(small_corpus):
+    texts = [d.text for d in small_corpus.documents]
+    svc = ShardedSearchService(
+        DocumentStore.from_texts(texts[:40], lemmatizer=small_corpus.lemmatizer),
+        n_shards=3,
+        sw_count=60,
+        fu_count=150,
+        algorithm="fused",
+        incremental=True,
+    )
+    svc.add_documents(texts[40:])
+    svc.delete_document(5)
+    svc.commit()
+    svc.compact(memory_budget_bytes=100_000)
+    survivors = [i for i in range(len(texts)) if i != 5]
+    ref_store = DocumentStore.from_texts(texts, lemmatizer=small_corpus.lemmatizer).subset(
+        survivors
+    )
+    ref = ShardedSearchService(
+        ref_store, n_shards=3, sw_count=60, fu_count=150, algorithm="fused"
+    )
+    for query in ["who are you who", "to be or not to be", "one at a time"]:
+        got = svc.search(query, top_k=8)
+        want = ref.search(query, top_k=8)
+        f_got = sorted((d.doc_id, f.start, f.end) for d in got.docs for f in d.fragments)
+        f_want = sorted((d.doc_id, f.start, f.end) for d in want.docs for f in d.fragments)
+        assert f_got == f_want, query
+    with pytest.raises(RuntimeError):
+        ref.add_documents(["nope"])

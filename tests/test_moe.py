@@ -60,6 +60,10 @@ print("LOCAL_OK", err)
 """
 
 
+@pytest.mark.skipif(
+    not hasattr(jax, "set_mesh"),
+    reason="subprocess uses jax.set_mesh (jax >= 0.6); not available here",
+)
 def test_local_dispatch_multidevice_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", _SUBPROC],
