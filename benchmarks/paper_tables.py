@@ -278,6 +278,147 @@ def bench_serving_results_match(serving: dict) -> bool:
     )
 
 
+# ---------------------------------------------------------------------------
+# planner + deadline-aware frontend (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def bench_frontend(n_queries=32, repeats=3):
+    """Serving-frontend bench: cache hit rates, tail latency, deadlines.
+
+    Four passes over one frontend (``search/frontend.py``):
+
+      * ``cold``        — every query served individually, result cache
+        empty (per-request p50/p99 from the best-of-``repeats`` rounds on a
+        fresh frontend each round, steady-state jit);
+      * ``warm_cached`` — the same slate again on the LAST cold frontend:
+        every request is a result-cache hit (hit rate must be 1.0 — a CI
+        gate, see ``benchmarks/README.md``);
+      * ``microbatch``  — the whole slate as ONE ``search_many`` call
+        (one fused dispatch per ``max_batch`` chunk);
+      * ``deadline``    — a deterministic admission-throughput model
+        (``calibrate=False, postings_per_sec=1``) with a budget at 60% of
+        the median plan cost: counts partial responses and skipped
+        subqueries (arXiv 2009.03679's recall-for-latency trade).
+
+    The equality guard compares the frontend's fragment sets against the
+    unplanned fused engine — the planner/caching layer must be invisible in
+    results (``results_match_unplanned`` gates ``benchmarks/run.py``).
+    """
+    from repro.search import fused as fused_mod
+    from repro.search.engine import SearchEngine
+    from repro.search.frontend import SearchRequest, ServingFrontend
+
+    store, idx = build_benchmark_index()
+    subs = _stop_lemma_queries(store, idx, n_queries=n_queries * 2, seed=9)
+    queries = list(dict.fromkeys(" ".join(s.lemmas) for s in subs))[:n_queries]
+
+    def frag_set(resp):
+        return {
+            (d.doc_id, f.start, f.end) for d in resp.docs for f in d.fragments
+        }
+
+    # equality guard vs the unplanned fused engine (exactness, not speed)
+    eng = SearchEngine(idx, lemmatizer=store.lemmatizer, algorithm="fused")
+    guard = ServingFrontend(idx, lemmatizer=store.lemmatizer)
+    match = all(
+        frag_set(guard.search(q, top_k=16)) == frag_set(eng.search(q, top_k=16))
+        for q in queries
+    )
+
+    # cold pass: per-request latency on a fresh frontend (caches empty)
+    best_lat: list[float] | None = None
+    frontend = None
+    for _ in range(repeats):
+        frontend = ServingFrontend(idx, lemmatizer=store.lemmatizer)
+        lat = []
+        for q in queries:
+            t0 = time.perf_counter()
+            frontend.search(q, top_k=16)
+            lat.append(time.perf_counter() - t0)
+        if best_lat is None or sum(lat) < sum(best_lat):
+            best_lat = lat
+    cold = np.asarray(best_lat)
+
+    # warm pass: same slate on the last cold frontend -> all cache hits
+    hits0 = frontend.metrics()["result_cache_hits"]
+    warm_lat = []
+    for q in queries:
+        t0 = time.perf_counter()
+        frontend.search(q, top_k=16)
+        warm_lat.append(time.perf_counter() - t0)
+    warm = np.asarray(warm_lat)
+    warm_hits = frontend.metrics()["result_cache_hits"] - hits0
+    hit_rate = warm_hits / len(queries)
+
+    # micro-batch pass: the slate as one call.  The first call compiles the
+    # batch-shape program (a one-time cost per shape bucket, DESIGN.md §9.2);
+    # timing uses a SECOND fresh frontend so caches are cold but jit is warm.
+    requests = [SearchRequest(q, top_k=16) for q in queries]
+    ServingFrontend(
+        idx, lemmatizer=store.lemmatizer, max_batch=len(queries)
+    ).search_many(requests)
+    mb_frontend = ServingFrontend(
+        idx, lemmatizer=store.lemmatizer, max_batch=len(queries)
+    )
+    fused_mod.reset_dispatch_count()
+    t0 = time.perf_counter()
+    mb_frontend.search_many(requests)
+    mb_sec = time.perf_counter() - t0
+    mb_dispatches = fused_mod.dispatch_count()
+
+    # deadline pass: deterministic model, budget = 60% of the median cost.
+    # " are" appends the paper's multi-lemma word (are -> are/be), so every
+    # request has >= 2 subqueries and admission has something to trade.
+    dl_queries = [q + " are" for q in queries]
+    dl_frontend = ServingFrontend(
+        idx,
+        lemmatizer=store.lemmatizer,
+        calibrate=False,
+        postings_per_sec=1.0,  # budget is denominated in postings
+    )
+    est = sorted(
+        dl_frontend.planner.plan(q).est_postings for q in dl_queries
+    )
+    budget = 0.6 * est[len(est) // 2]
+    partials = skipped = 0
+    for q in dl_queries:
+        resp = dl_frontend.search(q, top_k=16, deadline_sec=budget)
+        partials += int(resp.stats.partial)
+        skipped += resp.stats.skipped_subqueries
+
+    pct = lambda a, p: float(np.percentile(a, p) * 1e6)
+    return {
+        "n_queries": len(queries),
+        "results_match_unplanned": bool(match),
+        "cold": {
+            "us_per_query": float(cold.mean() * 1e6),
+            "p50_us": pct(cold, 50),
+            "p99_us": pct(cold, 99),
+        },
+        "warm_cached": {
+            "us_per_query": float(warm.mean() * 1e6),
+            "p50_us": pct(warm, 50),
+            "p99_us": pct(warm, 99),
+            "hit_rate": float(hit_rate),
+        },
+        "microbatch": {
+            "us_per_query": 1e6 * mb_sec / len(queries),
+            "device_dispatches": mb_dispatches,
+        },
+        "deadline": {
+            "budget_postings": float(budget),
+            "partial_responses": partials,
+            "skipped_subqueries": skipped,
+        },
+        "posting_cache": {
+            "hit_rate": mb_frontend.metrics()["posting_cache_hit_rate"],
+            "entries": mb_frontend.metrics()["posting_cache_entries"],
+            "bytes": mb_frontend.metrics()["posting_cache_bytes"],
+        },
+    }
+
+
 def bench_indexing(n_docs=120, doc_len=180, n_batches=6, quick=False):
     """Index-construction throughput: full build vs incremental ingest vs
     merge + compact (the arXiv 2006.07954 construction concern).

@@ -20,6 +20,7 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 from benchmarks.paper_tables import (  # noqa: E402
     bench_algorithms,
     bench_duplicates,
+    bench_frontend,
     bench_indexing,
     bench_serving,
     bench_serving_results_match,
@@ -75,6 +76,34 @@ def main() -> None:
               f"seed={serving['per_subquery_seed']['results']};"
               f"fused={serving['fused_batch']['results']}")
         sys.exit(1)
+
+    # ---- planner + deadline-aware frontend (cache hit rate, tail latency) ---
+    frontend = bench_frontend(
+        n_queries=16 if args.quick else 32, repeats=2 if args.quick else 3
+    )
+    for path in ("cold", "warm_cached"):
+        extra = (
+            f";hit_rate={frontend[path]['hit_rate']:.2f}"
+            if path == "warm_cached" else ""
+        )
+        print(f"frontend_{path},{frontend[path]['us_per_query']:.1f},"
+              f"p50_us={frontend[path]['p50_us']:.1f};"
+              f"p99_us={frontend[path]['p99_us']:.1f}{extra}")
+    print(f"frontend_microbatch,{frontend['microbatch']['us_per_query']:.1f},"
+          f"dispatches={frontend['microbatch']['device_dispatches']}")
+    print(f"frontend_deadline,{frontend['deadline']['budget_postings']:.0f},"
+          f"partials={frontend['deadline']['partial_responses']};"
+          f"skipped_subqueries={frontend['deadline']['skipped_subqueries']}")
+    # CI gates (benchmarks/README.md): the planner/caching layer must be
+    # invisible in results, and a repeat pass must be fully cache-served
+    if not frontend["results_match_unplanned"]:
+        print("frontend_results_MISMATCH,0,planned != unplanned fragments")
+        sys.exit(1)
+    if frontend["warm_cached"]["hit_rate"] < 1.0:
+        print(f"frontend_cache_MISS,0,"
+              f"hit_rate={frontend['warm_cached']['hit_rate']:.2f}")
+        sys.exit(1)
+    serving["frontend"] = frontend
     if args.json:
         out_path = Path(__file__).parent.parent / "BENCH_serving.json"
         out_path.write_text(json.dumps(serving, indent=2) + "\n")

@@ -23,14 +23,23 @@ Fidelity notes (see DESIGN.md §7):
 * §10.5's Processed-queue cleaning must mirror the Lemma-table bookkeeping
   of the §10.2 shrink loop (decrement counts), otherwise stale counts
   produce fragments that do not actually contain every lemma — we decrement;
-* one entry per text position (``Set`` overwrites), exactly as specified.
+* one entry per text position, but the entry holds the position's *lemma
+  set*, not a single lemma: a §2 multi-lemma word ("are" -> are, be) can
+  satisfy two subquery lemmas at one position, and the verbatim
+  ``Set``-overwrites reading silently drops one of them (missing e.g. the
+  minimal fragment of [to be who you are] whose "be" is supplied by the
+  word "are").  Duplicate ``Set`` calls for the SAME (position, lemma) still
+  overwrite, and the §10.1 completion check runs once per position (all of
+  the position's events enter the Lemma table first) — exactly the oracle's
+  atomic-position sweep, so SE2.4 stays fragment-identical to
+  ``core/oracle.py`` and every device engine.
 """
 
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Sequence
 
 from ..index.builder import IndexSet
@@ -87,7 +96,10 @@ class LemmaTable:
 
 @dataclass
 class _Entry:
-    lem: str = ""
+    # one entry per text position; ``lems`` is the position's lemma set
+    # (multi-lemma words can satisfy several subquery lemmas at one position
+    # — see the module fidelity notes)
+    lems: list[str] = field(default_factory=list)
     p: int = -1
 
 
@@ -125,12 +137,17 @@ class PositionTable:
         rel = r % self.W
         phys = self.order[buf]
         e = self.entries[phys][rel]
-        e.lem = lem  # one entry per position: last write wins (§10.3)
-        e.p = p
+        if e.p != p:  # entry reused from an older window: start fresh
+            e.p = p
+            e.lems = [lem]
+        elif lem not in e.lems:  # same (p, lem) overwrites; new lemma joins
+            e.lems.append(lem)
         self.mask[phys] |= 1 << rel
 
     def flush_first(self) -> list[tuple[int, str]]:
-        """Bit-Scan-Forward the first buffer's mask into the Source queue."""
+        """Bit-Scan-Forward the first buffer's mask into the Source queue
+        (one event per (position, lemma); a multi-lemma position emits its
+        lemmas in sorted order, matching the oracle's event stream)."""
         phys = self.order[0]
         m = self.mask[phys]
         out: list[tuple[int, str]] = []
@@ -138,7 +155,8 @@ class PositionTable:
             lsb = m & -m
             rel = lsb.bit_length() - 1
             e = self.entries[phys][rel]
-            out.append((e.p, e.lem))
+            for lem in sorted(e.lems):
+                out.append((e.p, lem))
             m ^= lsb
         self.mask[phys] = 0
         return out  # sorted by construction
@@ -177,10 +195,22 @@ class CombinerState:
         self.ptable.set(p, lem)
 
     def process_source(self, doc_id: int) -> None:
-        """§10.1 main loop: Source -> Processed + Lemma table + results."""
-        for p, lem in self.ptable.flush_first():
-            self.processed.append((p, lem))
-            self.table.add(lem)
+        """§10.1 main loop: Source -> Processed + Lemma table + results.
+
+        Positions are processed atomically: every event of a multi-lemma
+        position enters the Lemma table before the §10.2 completion check,
+        exactly like the oracle sweep — per-event checks would emit an extra
+        stale-start fragment when the position's first lemma already
+        completes the cover."""
+        src = self.ptable.flush_first()
+        i, n = 0, len(src)
+        while i < n:
+            p = src[i][0]
+            while i < n and src[i][0] == p:  # all events at this position
+                _, lem = src[i]
+                i += 1
+                self.processed.append((p, lem))
+                self.table.add(lem)
             # §10.2 check
             if not self.table.complete:
                 continue

@@ -23,7 +23,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
-from .lemma import FLList, Lemmatizer
+from .lemma import FLList, LemmaType, Lemmatizer
 
 __all__ = [
     "SelectedKey",
@@ -32,6 +32,9 @@ __all__ = [
     "Subquery",
     "canonicalize_key",
     "lemma_order_signature",
+    "classify_lemmas",
+    "key_family",
+    "EXECUTABLE_FAMILIES",
 ]
 
 
@@ -129,6 +132,61 @@ def expand_subqueries(query: str, lemmatizer: Lemmatizer, limit: int = 16) -> li
         return []
     combos = itertools.product(*per_position)
     return [Subquery(tuple(c)) for c in itertools.islice(combos, limit)]
+
+
+# ---------------------------------------------------------------------------
+# §5 lemma classification and §3 index-family binding (the planner's inputs)
+# ---------------------------------------------------------------------------
+
+# §3 index families that `IndexSet.key_postings` actually serves; keys bound
+# to any other family read zero postings in the current engines.
+EXECUTABLE_FAMILIES = frozenset({"triple", "stop_pair", "pair", "stop_single"})
+
+
+def classify_lemmas(lemmas: Iterable[str], fl: FLList) -> dict[str, LemmaType]:
+    """§5 query-lemma classification against the corpus FL thresholds.
+
+    Each lemma's class is its position in the FL-list relative to the
+    ``SWCount`` / ``SWCount + FUCount`` boundaries: stop, frequently-used, or
+    ordinary (unknown lemmas are ordinary).  This classification — not the
+    lemma text — decides which §3 index family can answer a subquery, so it
+    is the first step of query planning (``search/planner.py``).
+    """
+    return {l: fl.lemma_type(l) for l in lemmas}
+
+
+def key_family(key: SelectedKey, fl: FLList) -> str:
+    """The §3 index family that answers a canonical §6 key.
+
+    Mirrors ``IndexSet.key_postings`` dispatch exactly for the families the
+    engines serve (``EXECUTABLE_FAMILIES``); the remaining labels name the
+    paper's index that *would* cover the key but is not wired into query
+    execution, so planned cost (and results) for them is zero:
+
+    * arity 3                      -> ``"triple"``      — (f,s,t) stop triples
+    * arity 2, both stop           -> ``"stop_pair"``   — degenerate (f,s)
+    * arity 2, FU first            -> ``"pair"``        — (w,v) two-component
+    * arity 2, stop + non-stop     -> ``"nsw"``         — NSW records (§3)
+    * arity 2, both ordinary       -> ``"ordinary"``    — ordinary-index merge
+    * arity 1, stop                -> ``"stop_single"`` — degenerate (f)
+    * arity 1, non-stop            -> ``"ordinary"``
+
+    The planner prunes subqueries whose lemma event supply is zero (which
+    subsumes non-executable bindings) — exact w.r.t. the engines, which read
+    the same empty posting lists.
+    """
+    types = [fl.lemma_type(c) for c in key.components]
+    if key.arity == 3:
+        return "triple"
+    if key.arity == 2:
+        if all(t == LemmaType.STOP for t in types):
+            return "stop_pair"
+        if types[0] == LemmaType.FREQUENTLY_USED:
+            return "pair"
+        if LemmaType.STOP in types:
+            return "nsw"
+        return "ordinary"
+    return "stop_single" if types[0] == LemmaType.STOP else "ordinary"
 
 
 # ---------------------------------------------------------------------------

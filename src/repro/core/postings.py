@@ -34,7 +34,16 @@ class SearchResult:
 
 @dataclass
 class QueryStats:
-    """The paper's three reported per-query metrics (§11)."""
+    """Per-query accounting: the paper's three reported metrics (§11 —
+    postings read, data read size, results) plus the serving-layer counters
+    added by the fused pipeline and the planner/frontend (arXiv 2009.03679's
+    response-time-guarantee reporting).
+
+    ``partial`` is True when the deadline-aware frontend early-exited: the
+    returned top-k is exact over the *executed* subqueries (every reported
+    fragment and score is exact; skipped subqueries could only add docs or
+    raise scores) — see ``search/frontend.py``.
+    """
 
     postings_read: int = 0
     bytes_read: int = 0
@@ -44,6 +53,14 @@ class QueryStats:
     empty_subqueries: int = 0  # subqueries short-circuited before dispatch
     device_dispatches: int = 0  # device programs issued for this query/batch
     elapsed_sec: float = 0.0
+    # ---- planner / frontend counters (PR 3) -------------------------------
+    cache_hits: int = 0  # whole-query result-cache hits
+    cache_misses: int = 0  # planned + executed (not served from cache)
+    posting_cache_hits: int = 0  # hot posting-slice reuse during planning
+    pruned_subqueries: int = 0  # planner-proved-empty (exact, no work lost)
+    skipped_subqueries: int = 0  # deadline admission dropped (partial result)
+    partial: bool = False  # deadline early-exit happened
+    deadline_sec: float = 0.0  # the request's admission budget (0 = none)
 
     def merge(self, other: "QueryStats") -> None:
         self.postings_read += other.postings_read
@@ -54,6 +71,13 @@ class QueryStats:
         self.empty_subqueries += other.empty_subqueries
         self.device_dispatches += other.device_dispatches
         self.elapsed_sec += other.elapsed_sec
+        self.cache_hits += other.cache_hits
+        self.cache_misses += other.cache_misses
+        self.posting_cache_hits += other.posting_cache_hits
+        self.pruned_subqueries += other.pruned_subqueries
+        self.skipped_subqueries += other.skipped_subqueries
+        self.partial = self.partial or other.partial
+        self.deadline_sec = max(self.deadline_sec, other.deadline_sec)
 
 
 class KeyIterator:

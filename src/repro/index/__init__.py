@@ -5,6 +5,7 @@ from .incremental import (
     Segment,
     SegmentedIndexSet,
     as_index_set,
+    generation_token,
     index_sets_equal,
 )
 
@@ -20,5 +21,6 @@ __all__ = [
     "Segment",
     "SegmentedIndexSet",
     "as_index_set",
+    "generation_token",
     "index_sets_equal",
 ]

@@ -34,7 +34,10 @@ _POSTING_BYTES = {1: 8, 2: 12, 3: 16}  # int32 record sizes per key arity
 
 @dataclass
 class NSWRecords:
-    """Ragged near-stop-word info parallel to an ordinary posting array."""
+    """Ragged §3 near-stop-word records parallel to an ordinary posting
+    array: per posting, the stop lemmas within MaxDistance and their signed
+    distances (stop lemma ids are absolute FL-numbers — the one place they
+    reach storage, see DESIGN.md §10.2)."""
 
     offsets: np.ndarray  # (n_postings + 1,) int64
     stop_lemma: np.ndarray  # (total,) int32 FL-numbers

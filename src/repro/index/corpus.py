@@ -11,6 +11,11 @@ The generator mixes:
   * a Zipf tail of synthetic content words,
   * injected phrase snippets (the paper's running examples) so that the
     paper's example queries have non-trivial result sets.
+
+Exactness contract: a ``DocumentStore`` is the ground truth the differential
+harness rebuilds from — ``lemma_frequencies`` defines the FL-list, and the
+per-position ``lemma_stream`` is exactly what §3 row generation consumes, so
+any two builds over equal stores are byte-identical.
 """
 
 from __future__ import annotations
@@ -62,6 +67,10 @@ _PHRASES: tuple[str, ...] = (
 
 @dataclass
 class Document:
+    """One indexed text: word positions are 0-based ordinals (§3), and
+    ``lemma_stream`` holds one tuple of lemmas per position (§2 multi-lemma
+    words, e.g. "are" -> ("are", "be"))."""
+
     doc_id: int
     text: str
     # one tuple of lemmas per word position (multi-lemma words possible)
@@ -73,6 +82,9 @@ class Document:
 
 @dataclass
 class DocumentStore:
+    """The corpus a §3 build (or incremental rebuild oracle) runs over:
+    pre-lemmatized documents plus the shared §2 lemmatizer."""
+
     documents: list[Document]
     lemmatizer: Lemmatizer
 
@@ -126,7 +138,8 @@ def synthesize_corpus(
     phrase_rate: float = 0.04,
     include_paper_examples: bool = True,
 ) -> DocumentStore:
-    """Zipf-distributed synthetic corpus with injected paper phrases."""
+    """Zipf-distributed synthetic corpus with injected paper phrases — the
+    §11 experimental stand-in (see module docstring for the Zipf argument)."""
     rng = np.random.default_rng(seed)
     n_func = len(_FUNCTION_WORDS)
     tail = [f"w{idx:05d}" for idx in range(vocab_size)]

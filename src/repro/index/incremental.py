@@ -67,6 +67,7 @@ __all__ = [
     "Segment",
     "SegmentedIndexSet",
     "as_index_set",
+    "generation_token",
     "index_sets_equal",
     "merge_posting_arrays",
 ]
@@ -299,7 +300,8 @@ class _MergedNSW(Mapping):
 
 
 class SegmentedIndexSet(IndexSet):
-    """Query-time union of immutable segments minus tombstoned documents.
+    """Query-time union of immutable segments minus tombstoned documents
+    (DESIGN.md §10.1; posting merges preserve the §4 row order exactly).
 
     Duck-compatible with (and a subclass of) :class:`IndexSet`: the posting
     dict fields hold lazy merging mappings, ``key_postings`` and every engine
@@ -402,7 +404,8 @@ class SegmentedIndexSet(IndexSet):
 
 @dataclass
 class Segment:
-    """One immutable sorted generation unit.
+    """One immutable sorted generation unit: a complete §3 ``IndexSet`` over
+    one ingest batch (DESIGN.md §10.1).
 
     ``superseded`` lists docs re-keyed into a LATER segment after FL drift —
     they are filtered from this segment exactly like tombstones, but stay
@@ -465,6 +468,23 @@ class IncrementalIndexer:
         self._doc_lemmas: dict[int, frozenset[str]] = {}
         self._next_id = 0
         self._view: SegmentedIndexSet | None = None
+        # monotone mutation counter: bumped whenever the QUERY-VISIBLE state
+        # changes (commit, committed delete, compact) — the cache-invalidation
+        # token the serving frontend keys its LRU caches by (DESIGN.md §11)
+        self._mutations = 0
+
+    @property
+    def generation_token(self) -> int:
+        """Monotone token identifying the current query-visible index state.
+
+        Bumps on every ``commit``, committed ``delete_document`` and
+        ``compact`` — any event that can change the fragment set an engine
+        serving this indexer would return.  Frontend caches (§11 of
+        DESIGN.md) key entries by this token, so a generation bump
+        invalidates them without any explicit flush; buffered (uncommitted)
+        adds do not bump it because they are not query-visible yet.
+        """
+        return self._mutations
 
     # -- ingest / delete ----------------------------------------------------
 
@@ -525,6 +545,7 @@ class IncrementalIndexer:
             doc = self.documents.pop(doc_id)
             self.tombstones.add(doc_id)
             self._view = None  # tombstone filter must take effect
+            self._mutations += 1  # query-visible: invalidate frontend caches
         else:
             raise KeyError(doc_id)
         self._doc_lemmas.pop(doc_id, None)
@@ -580,6 +601,7 @@ class IncrementalIndexer:
             self.documents[doc.doc_id] = doc
         self.generation += 1
         self._view = None
+        self._mutations += 1
         return {
             "new_docs": len(new_docs),
             "rekeyed_docs": len(rekeyed),
@@ -716,6 +738,7 @@ class IncrementalIndexer:
             collected += len(dropped_tombstones)
         self.segments = new_segments
         self._view = None
+        self._mutations += 1
         return {"segments": len(self.segments), "collected": collected}
 
     # -- the live view ------------------------------------------------------
@@ -763,11 +786,29 @@ class IncrementalIndexer:
 
 
 def as_index_set(obj) -> IndexSet:
-    """Engines accept either a plain ``IndexSet`` or an ``IncrementalIndexer``
-    (resolved to its live view per call, so commits/deletes are picked up)."""
+    """Engines accept either a plain §3 ``IndexSet`` or an
+    ``IncrementalIndexer`` (resolved to its live DESIGN.md §10 view per
+    call, so commits/deletes are picked up)."""
     if isinstance(obj, IncrementalIndexer):
         return obj.index
     return obj
+
+
+def generation_token(obj) -> object:
+    """The cache-invalidation token for any index source (DESIGN.md §11).
+
+    * ``IncrementalIndexer`` (or anything exposing ``generation_token``,
+      e.g. ``ShardedSearchService``) — its monotone mutation token;
+    * plain ``IndexSet`` — the constant 0 (immutable snapshot, caches never
+      go stale).
+
+    Frontend LRU caches key every entry by this token: a bump makes all old
+    entries unreachable (natural invalidation, eventual LRU eviction).
+    """
+    tok = getattr(obj, "generation_token", None)
+    if tok is None:
+        return 0
+    return tok
 
 
 # ---------------------------------------------------------------------------
@@ -784,7 +825,8 @@ def _nsw_equal(a: NSWRecords, b: NSWRecords) -> bool:
 
 
 def index_sets_equal(a: IndexSet, b: IndexSet) -> tuple[bool, str]:
-    """Byte-level structural equality of two index sets.
+    """Byte-level structural equality of two §3 index sets — the
+    incremental == rebuild pin of DESIGN.md §10.3.
 
     Returns ``(equal, reason)`` — the reason names the first divergence so a
     failing differential test points straight at the broken layer.

@@ -1,16 +1,46 @@
-"""Serving launcher for the paper's search system.
+"""Serving launcher for the paper's search system (§5 end to end).
 
 ``python -m repro.launch.serve --queries "who are you who" "to be or not to be"``
 
-Builds a synthetic corpus, shards it, and serves queries through the
-Combiner (SE2.4) with per-query latency/postings accounting — the CPU-scale
-end-to-end driver.  ``--algorithm`` switches between SE1/SE2.1–SE2.4 for
-side-by-side comparison; ``--kill-shard`` demonstrates degraded fan-out.
+Builds a synthetic corpus, shards it, and serves queries — by default
+through the deadline-aware :class:`~repro.search.frontend.ServingFrontend`
+(query planner + micro-batched fused dispatch + generation-keyed caches),
+or through the raw per-algorithm engines with ``--no-frontend``.
+
+Useful flags:
+
+* ``--explain``       print each query's plan (lemma classes, §3 index-family
+                      bindings, live posting-cost estimates) before serving;
+* ``--deadline-ms``   per-request response-time budget (arXiv 2009.03679);
+                      partial responses are flagged in the output;
+* ``--repeat N``      serve the query list N times to show cache hit rates;
+* ``--algorithm``     SE1/SE2.1–SE2.4 host loops or the fused device batch
+                      (``--no-frontend`` path only);
+* ``--kill-shard``    degraded fan-out demo (``--no-frontend`` path only).
 """
 
 from __future__ import annotations
 
 import argparse
+
+
+def _print_response(resp, show_partial: bool = True) -> None:
+    flags = []
+    if resp.stats.cache_hits:
+        flags.append("CACHED")
+    if show_partial and resp.stats.partial:
+        flags.append(
+            f"PARTIAL (skipped {resp.stats.skipped_subqueries} subqueries)"
+        )
+    tag = f"  [{', '.join(flags)}]" if flags else ""
+    print(
+        f"\nquery: {resp.query!r}  ({resp.n_subqueries} subqueries, "
+        f"{resp.stats.postings_read} postings, "
+        f"{resp.stats.elapsed_sec * 1000:.1f} ms){tag}"
+    )
+    for d in resp.docs:
+        frags = ", ".join(f"[{f.start},{f.end}]" for f in d.fragments[:4])
+        print(f"  doc {d.doc_id:5d} score={d.score:.4f} fragments: {frags}")
 
 
 def main() -> None:
@@ -19,14 +49,29 @@ def main() -> None:
         "who are you who", "to be or not to be", "what do you do all day",
     ])
     ap.add_argument("--algorithm", default="se2.4",
-                    choices=["se1", "se2.1", "se2.2", "se2.3", "se2.4"])
+                    choices=["se1", "se2.1", "se2.2", "se2.3", "se2.4", "fused"],
+                    help="engine for the raw-engine path; passing a non-default "
+                         "value implies --no-frontend (the frontend always "
+                         "plans into the fused pipeline)")
     ap.add_argument("--n-docs", type=int, default=150)
     ap.add_argument("--n-shards", type=int, default=4)
     ap.add_argument("--sw-count", type=int, default=60)
     ap.add_argument("--fu-count", type=int, default=150)
     ap.add_argument("--max-distance", type=int, default=5)
     ap.add_argument("--top-k", type=int, default=5)
-    ap.add_argument("--kill-shard", type=int, action="append", default=[])
+    ap.add_argument("--kill-shard", type=int, action="append", default=[],
+                    help="simulate dead shards; implies --no-frontend (the "
+                         "frontend serves every live shard)")
+    ap.add_argument("--no-frontend", action="store_true",
+                    help="serve through the raw engines instead of the "
+                         "planner + frontend layer")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request response-time budget (frontend mode)")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="serve the query list this many times (shows the "
+                         "result-cache hit rate in frontend mode)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print each query's plan before serving")
     args = ap.parse_args()
 
     from ..index.corpus import synthesize_corpus
@@ -39,14 +84,41 @@ def main() -> None:
         fu_count=args.fu_count, max_distance=args.max_distance,
         algorithm=args.algorithm,
     )
-    for q in args.queries:
-        resp = svc.search(q, top_k=args.top_k, dead_shards=args.kill_shard)
-        print(f"\nquery: {q!r}  ({args.algorithm}, {resp.n_subqueries} subqueries, "
-              f"{resp.stats.postings_read} postings, "
-              f"{resp.stats.elapsed_sec*1000:.1f} ms)")
-        for d in resp.docs:
-            frags = ", ".join(f"[{f.start},{f.end}]" for f in d.fragments[:4])
-            print(f"  doc {d.doc_id:5d} score={d.score:.4f} fragments: {frags}")
+
+    # --kill-shard / a non-default --algorithm only make sense on the raw
+    # engine path: honor them there instead of silently ignoring them
+    if args.kill_shard or args.algorithm != "se2.4":
+        if not args.no_frontend:
+            print("note: --kill-shard/--algorithm select the raw engine path "
+                  "(frontend disabled for this run)")
+        args.no_frontend = True
+
+    if args.no_frontend:
+        for q in args.queries * args.repeat:
+            resp = svc.search(q, top_k=args.top_k, dead_shards=args.kill_shard)
+            _print_response(resp, show_partial=False)
+        return
+
+    from ..search.frontend import SearchRequest, ServingFrontend
+
+    deadline = args.deadline_ms / 1000.0 if args.deadline_ms is not None else None
+    frontend = ServingFrontend(svc, default_deadline_sec=deadline)
+    if args.explain:
+        for q in args.queries:
+            print(frontend.planner.plan(q).explain())
+    for _round in range(args.repeat):
+        requests = [SearchRequest(q, top_k=args.top_k) for q in args.queries]
+        for resp in frontend.search_many(requests):
+            _print_response(resp)
+    m = frontend.metrics()
+    print(
+        f"\nfrontend: served {m['served']} requests, "
+        f"result-cache hit rate {m['result_cache_hit_rate']:.2f}, "
+        f"posting-cache hit rate {m['posting_cache_hit_rate']:.2f} "
+        f"({m['posting_cache_entries']} slices, "
+        f"{m['posting_cache_bytes'] / 1024:.0f} KB), "
+        f"{m['partial_responses']} partial responses"
+    )
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Document-sharded distributed search (the paper's system at cluster scale).
+"""Document-sharded distributed search (the paper's §1 system at cluster
+scale; layout in DESIGN.md §4).
 
 The proximity-search workload is embarrassingly document-parallel: every
 device owns a document shard's packed posting tensors; a query fans out to
@@ -6,6 +7,11 @@ all shards, each runs the vectorized Combiner locally, and per-shard top-k
 results tree-merge through an all-gather.  The ``pod`` axis is just more
 document shards — fan-out crosses pods once per query batch, the per-shard
 compute never does.
+
+Exactness contract: shards hold disjoint documents indexed under ONE
+corpus-global FL-list, so the cross-shard fragment union is byte-identical
+to a single-index build over the same documents (the differential harness
+pins this through every engine).
 
 This module provides both:
   * a **device-parallel** path (shard_map over the real mesh) used by the
@@ -38,7 +44,8 @@ __all__ = ["ShardedSearchService", "shard_documents", "device_topk_merge"]
 
 
 def shard_documents(store: DocumentStore, n_shards: int) -> list[DocumentStore]:
-    """Round-robin document partitioning (doc ids stay global)."""
+    """Round-robin document partitioning (doc ids stay global) — the §3
+    document axis split of DESIGN.md §4's document-parallel serving layout."""
     shards: list[list] = [[] for _ in range(n_shards)]
     for doc in store.documents:
         shards[doc.doc_id % n_shards].append(doc)
@@ -53,7 +60,8 @@ class ShardStats:
 
 
 class ShardedSearchService:
-    """N-shard search service with straggler-aware fan-out.
+    """N-shard search service with straggler-aware fan-out (DESIGN.md §4;
+    §5 serving over per-shard §3 indexes, fragment-exact across shards).
 
     Each shard builds ITS OWN indexes over its documents but shares the
     global FL-list (lemma typing must agree across shards — in production
@@ -129,6 +137,20 @@ class ShardedSearchService:
         if self.indexers is not None:
             return [ix.index for ix in self.indexers]
         return self._static_shards
+
+    @property
+    def generation_token(self) -> tuple:
+        """Cache-invalidation token across every shard (DESIGN.md §11).
+
+        The tuple of per-shard mutation counters: any shard's ``commit`` /
+        ``delete`` / ``compact`` changes the token, so a ``ServingFrontend``
+        over this service invalidates exactly when the corpus-visible state
+        can change.  Static (non-incremental) services are immutable and
+        return a constant.
+        """
+        if self.indexers is None:
+            return ("static",)
+        return tuple(ix.generation_token for ix in self.indexers)
 
     # ---- incremental mutation endpoints -----------------------------------
 
@@ -326,7 +348,8 @@ def device_topk_merge(
     k: int,
     mesh: Mesh | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Merge per-shard top-k lists into a global top-k (tree reduction).
+    """Merge per-shard top-k lists into a global top-k (tree reduction) —
+    the only collective of DESIGN.md §4's document-parallel serving layout.
 
     Inside shard_map this is an all-gather along the document axis followed
     by a local k-selection — O(S*K) per device, the standard serving merge.

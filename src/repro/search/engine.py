@@ -8,6 +8,10 @@
 The host algorithms (``se1`` .. ``se2.4``) run one subquery at a time; the
 ``fused`` algorithm routes the whole query — and, through ``search_batch``, a
 whole query *batch* — into one device program (``search/fused.py``).
+
+Exactness contract: every algorithm choice returns the identical fragment
+union for a query (the differential harness pins all of them against the
+§10 oracle); they differ only in work and dispatch shape.
 """
 
 from __future__ import annotations
@@ -44,6 +48,9 @@ ALGORITHMS: dict[str, Callable[[Subquery, IndexSet], tuple[list[SearchResult], Q
 
 @dataclass
 class RankedDoc:
+    """One ranked document: §14 proximity score plus its minimal fragments
+    (sorted ``(start, end)`` — the ``rank_documents`` ordering spec)."""
+
     doc_id: int
     score: float
     fragments: list[SearchResult]
@@ -51,6 +58,9 @@ class RankedDoc:
 
 @dataclass
 class QueryResponse:
+    """A served query: §14-ranked docs plus the §11 per-query accounting
+    (``QueryStats`` — postings/bytes read, cache and deadline counters)."""
+
     query: str
     docs: list[RankedDoc]
     stats: QueryStats
@@ -58,8 +68,9 @@ class QueryResponse:
 
 
 class SearchEngine:
-    """Front door over one index shard (the distributed engine fans out to
-    many of these — see ``search/distributed.py``)."""
+    """Front door over one index shard: the §5 pipeline end to end
+    (lemmatize -> subqueries -> §4 algorithm -> §14 rank).  The distributed
+    engine fans out to many of these — see ``search/distributed.py``."""
 
     def __init__(
         self,
@@ -98,6 +109,36 @@ class SearchEngine:
 
     def search(self, query: str, top_k: int = 10) -> QueryResponse:
         return self.search_batch([query], top_k=top_k)[0]
+
+    # ---- planned path (§5 made explicit; see search/planner.py) -----------
+
+    def plan(self, query: str):
+        """Build a :class:`~repro.search.planner.QueryPlan` for ``query``:
+        §5 lemma classification, §6 key selection, §3 index-family bindings
+        and live-view cost estimates.  Executing it (``search_planned``) is
+        fragment-identical to ``search`` — the plan only makes the engine's
+        implicit choices inspectable and prunable."""
+        from .planner import QueryPlanner
+
+        return QueryPlanner(self._index_source, lemmatizer=self.lemmatizer).plan(
+            query
+        )
+
+    def search_planned(self, plan, top_k: int = 10) -> QueryResponse:
+        """Execute a pre-built plan through the fused pipeline (one device
+        dispatch).  Exactness: byte-identical fragments to ``search`` with
+        ``algorithm="fused"`` on the same live view (``tests/test_planner.py``
+        pins this against the §10 oracle)."""
+        from .planner import execute_plans
+
+        return execute_plans(
+            [plan],
+            [self.index],
+            max_distance=self.index.max_distance,
+            top_k=top_k,
+            doc_len=self.doc_len,
+            use_kernel=self.use_kernel,
+        )[0]
 
     def search_batch(
         self, queries: Sequence[str], top_k: int = 10

@@ -71,18 +71,21 @@ _DISPATCHES = 0
 
 
 def dispatch_count() -> int:
-    """Device programs issued by this module since the last reset (tests
-    count these to assert one-dispatch-per-query-batch serving)."""
+    """Device programs issued by this module since the last reset (tests and
+    the DESIGN.md §9 benches count these to assert one-dispatch-per-batch
+    serving)."""
     return _DISPATCHES
 
 
 def reset_dispatch_count() -> None:
+    """Zero the DESIGN.md §9 dispatch counter (see ``dispatch_count``)."""
     global _DISPATCHES
     _DISPATCHES = 0
 
 
 def bucket_pow2(n: int, lo: int = 1) -> int:
-    """Smallest power of two >= max(n, lo) — the jit-cache shape budget."""
+    """Smallest power of two >= max(n, lo) — the jit-cache shape budget of
+    DESIGN.md §9.2 (padded batching, logarithmically many compiled programs)."""
     n = max(n, lo)
     return 1 << (n - 1).bit_length()
 
@@ -94,7 +97,8 @@ def bucket_pow2(n: int, lo: int = 1) -> int:
 
 @dataclass
 class SegmentEvents:
-    """Compact event transport for one (subquery, shard) work item.
+    """Compact event transport for one (subquery, shard) work item — the
+    §10.4 ``Set`` calls batched into triples (DESIGN.md §9.1).
 
     Events are deduplicated and sorted by (doc, pos, lemma).  ``rank`` is the
     event's occurrence index within its (doc, lemma) group — the row of the
@@ -152,7 +156,8 @@ def intersect_candidates(
     device_threshold: int = INTERSECT_DEVICE_THRESHOLD,
 ) -> np.ndarray:
     """Sorted-unique doc-list intersection across a subquery's keys — the
-    Combiner's Step-1 document alignment, run once as a batch pre-filter.
+    Combiner's §10.1 Step-1 document alignment, run once as a batch
+    pre-filter (DESIGN.md §9.1).
 
     Lists at or above ``device_threshold`` go through the Pallas block
     intersection (``kernels/intersect.py``); smaller ones use the identical
@@ -180,7 +185,9 @@ def extract_segment_events(
     stats: QueryStats | None = None,
     intersect_device_threshold: int = INTERSECT_DEVICE_THRESHOLD,
 ) -> SegmentEvents | None:
-    """Key postings -> compact (doc_slot, pos, lemma) event triples.
+    """Key postings -> compact (doc_slot, pos, lemma) event triples — the
+    §10.4 ``Set`` calls batched, plus the §10.1/§10.3 pre-filters
+    (DESIGN.md §9.1).
 
     Returns ``None`` for an empty subquery (no key events, or the Step-1
     candidate intersection is empty) so callers short-circuit instead of
@@ -307,7 +314,8 @@ def extract_segment_events(
 
 @dataclass
 class QueryBatchPlan:
-    """Fixed-shape tensors for one fused device dispatch.
+    """Fixed-shape tensors for one fused device dispatch (DESIGN.md §9.2
+    bucketed budgets; the §10.4 events of every work item, packed).
 
     The batch is packed *row-major*: every (segment, candidate-doc) pair of
     every query occupies one row of a single global row axis ``R`` — no
@@ -331,17 +339,22 @@ class QueryBatchPlan:
 
 
 def plan_query_batch(
-    work: Sequence[Sequence[tuple[Subquery, IndexSet]]],
+    work: Sequence[Sequence[tuple]],
     doc_len: int = 512,
     stats: QueryStats | Sequence[QueryStats] | None = None,
     intersect_device_threshold: int = INTERSECT_DEVICE_THRESHOLD,
 ) -> QueryBatchPlan | None:
     """Pack a query batch into one device program's inputs.
 
-    ``work[qi]`` lists query ``qi``'s (subquery, index-shard) items — the
+    ``work[qi]`` lists query ``qi``'s ``(subquery, index-shard)`` items — the
     cross product the per-subquery serving loops used to dispatch one call
-    each for.  ``stats`` is one accumulator for the batch or one per query.
-    Returns ``None`` when every item is empty (nothing to dispatch).
+    each for.  An item may carry a third element, the §6 keys to use
+    (``(subquery, index, keys)``): the query planner passes its pre-selected
+    bindings this way so plan execution reads exactly the postings the plan
+    costed (``search/planner.py``); two-element items select keys themselves,
+    and both forms produce identical events for identical key sets.
+    ``stats`` is one accumulator for the batch or one per query.  Returns
+    ``None`` when every item is empty (nothing to dispatch).
     """
     def stat_for(qi: int) -> QueryStats | None:
         if stats is None or isinstance(stats, QueryStats):
@@ -350,10 +363,13 @@ def plan_query_batch(
 
     segs: list[tuple[int, SegmentEvents]] = []
     for qi, items in enumerate(work):
-        for sub, index in items:
+        for item in items:
+            sub, index = item[0], item[1]
+            keys = item[2] if len(item) > 2 else None
             se = extract_segment_events(
                 sub,
                 index,
+                keys=keys,
                 doc_len=doc_len,
                 stats=stat_for(qi),
                 intersect_device_threshold=intersect_device_threshold,
@@ -552,7 +568,9 @@ def fused_serve_batch(
 
 @dataclass
 class FusedBatchResult:
-    """Per-query exact fragment sets plus the device's slot-level ranking."""
+    """Per-query exact fragment sets plus the device's slot-level ranking
+    (DESIGN.md §9.3: the fragment readout is the exact §10.2 result; the
+    device top-k is row-level, for dashboards/serve_step consumers)."""
 
     per_query: list[list[SearchResult]]  # deduped fragment union per query
     top_docs: np.ndarray  # [Q, K] int32 (-1 pad)
@@ -580,7 +598,8 @@ def run_query_batch(
     stats: QueryStats | None = None,
 ) -> FusedBatchResult:
     """Dispatch ONE device program for the plan and read fragments out with a
-    single ``np.nonzero`` over the whole event batch."""
+    single ``np.nonzero`` over the whole event batch (DESIGN.md §9.3; the
+    fragment sets are exact §10.2 results, identical to the scalar Combiner)."""
     global _DISPATCHES
     out = fused_serve_batch(
         jnp.asarray(plan.events),

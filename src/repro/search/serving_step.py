@@ -44,6 +44,9 @@ def serve_step(
     top_k: int = 16,
     compute_dtype: str = "uint8",  # §Perf-3: occupancy/prefix counts fit u8
 ):
+    """One fixed-shape serving step: scatter §10.4 posting events into
+    per-cluster occupancy, run the vectorized §10.2 window cover, score §14
+    relevance and select per-query top-k docs (see module docstring)."""
     b, p, _ = postings.shape
     l = mult.shape[1]
     c, n = n_clusters, window_len

@@ -82,7 +82,8 @@ def pack_subquery_events(
 
 
 class VectorizedEngine:
-    """Batched Combiner over one index shard (the fused serving pipeline)."""
+    """Batched Combiner over one index shard (the DESIGN.md §9 fused serving
+    pipeline); fragment sets identical to the scalar §10 Combiner."""
 
     def __init__(
         self,

@@ -168,3 +168,29 @@ def test_random_corpus_se24_equals_oracle(seed):
     expected = oracle_search(sub, keys, post, idx.max_distance)
     got, _ = se24_combiner(sub, idx)
     assert sorted(got) == sorted(expected)
+
+
+def test_se24_multi_lemma_position_counts_both_lemmas():
+    """Regression (PR 3): a §2 multi-lemma word ("are" -> are, be) satisfies
+    TWO subquery lemmas at one position.  The verbatim §10.3 Set-overwrite
+    dropped one of them, so SE2.4 missed the minimal fragment whose "be" is
+    supplied by the word "are" and emitted a longer stale-start fragment
+    instead — diverging from the oracle (and the device engines, which were
+    already event-exact).  Pins the atomic-position lemma-set fix."""
+    lem = Lemmatizer()
+    texts = [
+        # positions:  0  1   2   3   4
+        "when be of to who are you who",
+        # the minimal fragment for [to be who you are] is [3..6]:
+        # to(3) who(4) are+be(5) you(6) — "be" comes from the word "are"
+    ]
+    store = DocumentStore.from_texts(texts, lemmatizer=lem)
+    idx = build_indexes(store, sw_count=30, fu_count=30, max_distance=5)
+    sub = expand_subqueries("to be who you are", lem)[0]
+    assert sub.lemmas == ("to", "be", "who", "you", "are")
+    keys = select_keys(sub, idx.fl)
+    expected = _oracle(sub, keys, idx)
+    got, _ = se24_combiner(sub, idx)
+    assert sorted(got) == expected
+    frags = {(r.doc_id, r.start, r.end) for r in got}
+    assert (0, 3, 6) in frags, "the multi-lemma-position minimal fragment"

@@ -1,0 +1,30 @@
+"""Tier-1 enforcement of the documentation contract (ISSUE 3 satellite).
+
+Every public ``repro.search`` / ``repro.index`` API must state its paper-§
+anchor, and every module its exactness contract — checked by
+``tools/docstring_audit.py`` (the same script the dedicated CI step runs);
+plus the doctest examples embedded in the ranking spec.
+"""
+
+from __future__ import annotations
+
+import doctest
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+
+def test_public_api_docstrings_have_anchors_and_contracts():
+    from tools.docstring_audit import audit
+
+    problems = audit(verbose=False)
+    assert not problems, "\n".join(problems)
+
+
+def test_relevance_doctests():
+    import repro.search.relevance as relevance
+
+    result = doctest.testmod(relevance, verbose=False)
+    assert result.attempted > 0, "ranking spec lost its doctest examples"
+    assert result.failed == 0

@@ -1,0 +1,311 @@
+"""Planner + frontend differential and behavioural tests (DESIGN.md §11).
+
+The load-bearing contract: **planned execution is fragment-identical to the
+unplanned SE2.4 oracle** on the same live view, across the same randomized
+corpora the engine-equivalence harness uses (``tests/strategies.py``) —
+the planner re-orders and prunes provably-empty work, it never changes
+results.  On top of that: micro-batching dispatch counts, result/posting
+cache behaviour (including invalidation after ``compact``), and deadline
+early-exit semantics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings
+from tests.strategies import make_corpus, make_queries, seeds
+
+from repro.core.combiner import se24_combiner
+from repro.core.keys import EXECUTABLE_FAMILIES, expand_subqueries, select_keys
+from repro.core.lemma import LemmaType
+from repro.core.oracle import oracle_search
+from repro.index import DocumentStore, IncrementalIndexer, build_indexes
+from repro.search import fused
+from repro.search.distributed import ShardedSearchService
+from repro.search.engine import SearchEngine
+from repro.search.frontend import SearchRequest, ServingFrontend
+from repro.search.planner import QueryPlanner
+from repro.search.relevance import rank_documents
+
+
+def _frag_set(results):
+    return {(r.doc_id, r.start, r.end) for r in results}
+
+
+def _response_frags(resp):
+    return sorted((d.doc_id, f.start, f.end) for d in resp.docs for f in d.fragments)
+
+
+def _oracle_union(query, index, lemmatizer):
+    union = set()
+    for sub in expand_subqueries(query, lemmatizer):
+        keys = select_keys(sub, index.fl)
+        postings = {k: index.key_postings(k.components) for k in keys}
+        union |= _frag_set(oracle_search(sub, keys, postings, index.max_distance))
+    return union
+
+
+def _build(seed, max_docs=12):
+    spec = make_corpus(seed, max_docs=max_docs)
+    store = DocumentStore.from_texts(spec.texts)
+    index = build_indexes(
+        store,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+    )
+    return spec, store, index
+
+
+# ---------------------------------------------------------------------------
+# differential: planned execution == unplanned SE2.4 oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(seeds)
+def test_planned_execution_matches_oracle(seed):
+    spec, store, index = _build(seed)
+    eng = SearchEngine(index, lemmatizer=store.lemmatizer, algorithm="fused")
+    frontend = ServingFrontend(index, lemmatizer=store.lemmatizer)
+    for query in make_queries(seed, spec, n_queries=3):
+        oracle = sorted(_oracle_union(query, index, store.lemmatizer))
+        planned = eng.search_planned(eng.plan(query), top_k=64)
+        assert _response_frags(planned) == oracle, (query, "planned != oracle")
+        served = frontend.search(query, top_k=64)
+        assert _response_frags(served) == oracle, (query, "frontend != oracle")
+        # repeat pass: served from the result cache, still identical
+        cached = frontend.search(query, top_k=64)
+        assert cached.stats.cache_hits == 1
+        assert _response_frags(cached) == oracle, (query, "cached != oracle")
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seeds)
+def test_frontend_over_sharded_service_matches_unplanned(seed):
+    spec, store, index = _build(seed, max_docs=8)
+    svc = ShardedSearchService(
+        store,
+        n_shards=2,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+        algorithm="fused",
+    )
+    frontend = ServingFrontend(svc)
+    queries = make_queries(seed, spec, n_queries=2)
+    unplanned = svc.search_batch(queries, top_k=64)
+    served = frontend.search_many(
+        [SearchRequest(q, top_k=64) for q in queries]
+    )
+    for a, b in zip(unplanned, served):
+        assert _response_frags(a) == _response_frags(b), (a.query, "sharded")
+
+
+# ---------------------------------------------------------------------------
+# plan structure: classification, bindings, live-view costs, pruning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_structure_and_costs(small_index, lemmatizer):
+    planner = QueryPlanner(small_index, lemmatizer=lemmatizer)
+    plan = planner.plan("who are you who")
+    assert plan.subqueries and not plan.n_pruned
+    for sp in plan.subqueries:
+        # §5 classification comes straight from the FL thresholds
+        for lemma, t in sp.lemma_types.items():
+            assert t == small_index.fl.lemma_type(lemma)
+        # bindings mirror select_keys + key_postings exactly
+        assert sp.keys == tuple(select_keys(sp.subquery, small_index.fl))
+        for b in sp.bindings:
+            rows = small_index.key_postings(b.key.components)
+            assert b.est_postings == len(rows)
+            assert b.est_bytes == rows.nbytes
+            assert (b.est_postings == 0) or b.family in EXECUTABLE_FAMILIES
+        assert sp.est_postings == sum(b.est_postings for b in sp.bindings)
+    assert plan.est_postings > 0
+
+
+def test_plan_prunes_unknown_lemma_exactly(small_index, lemmatizer):
+    """A query word absent from the corpus has zero posting supply: the plan
+    prunes the subquery, and the engines agree that it yields nothing."""
+    eng = SearchEngine(small_index, lemmatizer=lemmatizer, algorithm="fused")
+    query = "who are zzzunknownlemma"
+    plan = eng.plan(query)
+    assert plan.n_pruned == len(plan.subqueries)
+    planned = eng.search_planned(plan, top_k=16)
+    assert planned.docs == []
+    assert planned.stats.pruned_subqueries == plan.n_pruned
+    unplanned = eng.search(query, top_k=16)
+    assert _response_frags(planned) == _response_frags(unplanned) == []
+
+
+# ---------------------------------------------------------------------------
+# frontend: micro-batching, caches, invalidation, deadlines
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def incremental_frontend(small_corpus):
+    ix = IncrementalIndexer(
+        sw_count=60, fu_count=150, max_distance=5,
+        lemmatizer=small_corpus.lemmatizer,
+    )
+    ix.add_documents([d.text for d in small_corpus.documents])
+    ix.commit()
+    return ix, ServingFrontend(ix, lemmatizer=small_corpus.lemmatizer)
+
+
+def test_microbatch_one_dispatch_per_admitted_batch(small_index, lemmatizer):
+    frontend = ServingFrontend(small_index, lemmatizer=lemmatizer, max_batch=8)
+    queries = ["who are you who", "to be or not to be", "what do you do all day"]
+    fused.reset_dispatch_count()
+    out = frontend.search_many([SearchRequest(q, top_k=8) for q in queries])
+    assert fused.dispatch_count() == 1  # one fused program for the whole slate
+    assert all(r.stats.device_dispatches == 1 for r in out)
+    # a second slate of the same queries is served without any dispatch
+    fused.reset_dispatch_count()
+    out2 = frontend.search_many([SearchRequest(q, top_k=8) for q in queries])
+    assert fused.dispatch_count() == 0
+    assert all(r.stats.cache_hits == 1 for r in out2)
+    for a, b in zip(out, out2):
+        assert _response_frags(a) == _response_frags(b)
+    # max_batch=1 splits the same slate into one dispatch per request
+    frontend2 = ServingFrontend(small_index, lemmatizer=lemmatizer, max_batch=1)
+    fused.reset_dispatch_count()
+    frontend2.search_many([SearchRequest(q, top_k=8) for q in queries])
+    assert fused.dispatch_count() == len(queries)
+
+
+def test_result_cache_invalidated_after_commit_and_compact(incremental_frontend):
+    ix, frontend = incremental_frontend
+    query = "who are you who"
+    first = frontend.search(query, top_k=8)
+    assert first.stats.cache_misses == 1 and first.docs
+    assert frontend.search(query, top_k=8).stats.cache_hits == 1
+
+    # delete the top document, compact: generation bumps, cache must miss
+    victim = first.docs[0].doc_id
+    ix.delete_document(victim)
+    ix.compact()
+    fresh = frontend.search(query, top_k=8)
+    assert fresh.stats.cache_hits == 0 and fresh.stats.cache_misses == 1
+    assert victim not in [d.doc_id for d in fresh.docs]
+    # fresh results are exact w.r.t. the post-compact oracle
+    oracle = sorted(_oracle_union(query, ix.index, ix.lemmatizer))
+    got = sorted(
+        set(_response_frags(frontend.search(query, top_k=1000)))
+    )
+    assert got == oracle
+
+    # a commit (new docs) also invalidates
+    before = frontend.search(query, top_k=8)
+    ix.add_documents(["who are you who are you"])
+    ix.commit()
+    after = frontend.search(query, top_k=8)
+    assert after.stats.cache_hits == 0
+    assert after.stats.results > before.stats.results
+
+
+def test_deadline_zero_budget_is_empty_partial(small_index, lemmatizer):
+    frontend = ServingFrontend(
+        small_index, lemmatizer=lemmatizer, calibrate=False
+    )
+    resp = frontend.search("who are you who", top_k=8, deadline_sec=0.0)
+    assert resp.stats.partial
+    assert resp.stats.skipped_subqueries > 0
+    assert resp.docs == [] and resp.stats.results == 0
+    # partial responses are never cached
+    full = frontend.search("who are you who", top_k=8)
+    assert full.stats.cache_hits == 0 and full.docs
+
+
+def test_deadline_early_exit_is_correctly_ranked_partial(small_index, lemmatizer):
+    """With a budget that fits only the cheapest subquery, the response is
+    partial AND exactly the ranking of that subquery's fragment set."""
+    frontend = ServingFrontend(
+        small_index,
+        lemmatizer=lemmatizer,
+        calibrate=False,
+        postings_per_sec=1.0,  # 1 posting per second: any budget is tight
+    )
+    query = "who are you who"
+    plan = frontend.planner.plan(query)
+    execs = sorted(plan.executable(), key=lambda sp: sp.est_postings)
+    assert len(execs) >= 2, "query must expand to multiple subqueries"
+    cheapest = execs[0]
+    budget = (cheapest.est_postings + 0.5)  # seconds; admits exactly one
+
+    resp = frontend.search(query, top_k=16, deadline_sec=budget)
+    assert resp.stats.partial
+    assert resp.stats.skipped_subqueries == len(execs) - 1
+    assert resp.stats.deadline_sec == budget
+
+    # the partial result equals the exact ranking over the admitted subset
+    results, _ = se24_combiner(cheapest.subquery, small_index)
+    expected = rank_documents(_as_results(_frag_set(results)), top_k=16)
+    got = [(d.doc_id, d.score) for d in resp.docs]
+    assert got == [(doc, score) for doc, score, _ in expected]
+
+    # no deadline -> the full (non-partial) result, strictly a superset
+    full = frontend.search(query, top_k=16)
+    assert not full.stats.partial
+    assert set(_response_frags(resp)) <= set(_response_frags(full))
+
+
+def _as_results(frags):
+    from repro.core.postings import SearchResult
+
+    return [SearchResult(doc_id=d, start=s, end=e) for d, s, e in frags]
+
+
+def test_mixed_top_k_requests_each_get_their_own_cut(small_index, lemmatizer):
+    """A micro-batch chunk ranks at the chunk-wide max top_k; every response
+    (and its cached copy) must still be trimmed to its own request's top_k."""
+    frontend = ServingFrontend(small_index, lemmatizer=lemmatizer)
+    small, big = frontend.search_many(
+        [
+            SearchRequest("who are you who", top_k=1),
+            SearchRequest("who are you who", top_k=10),
+        ]
+    )
+    assert len(small.docs) == 1 and len(big.docs) > 1
+    # the rank prefix property: small's doc is big's top doc
+    assert small.docs[0].doc_id == big.docs[0].doc_id
+    # and the cached copy stays trimmed
+    again = frontend.search("who are you who", top_k=1)
+    assert again.stats.cache_hits == 1 and len(again.docs) == 1
+
+
+def test_duplicate_slate_requests_coalesce(small_index, lemmatizer):
+    """Identical no-deadline misses in one slate are planned/executed once."""
+    frontend = ServingFrontend(small_index, lemmatizer=lemmatizer)
+    fused.reset_dispatch_count()
+    out = frontend.search_many(
+        [SearchRequest("who are you who", top_k=8)] * 3
+    )
+    assert fused.dispatch_count() == 1
+    assert frontend.metrics()["result_cache_misses"] == 1  # one planned miss
+    frags = [_response_frags(r) for r in out]
+    assert frags[0] == frags[1] == frags[2] and frags[0]
+
+
+def test_posting_cache_lru_eviction():
+    from repro.search.frontend import PostingCache
+
+    cache = PostingCache(capacity_bytes=100)
+    a = np.zeros(10, np.int32)  # 40 bytes
+    b = np.zeros(10, np.int32)
+    c = np.zeros(10, np.int32)
+    cache.put(("g", 0, "a"), a)
+    cache.put(("g", 0, "b"), b)
+    assert cache.get(("g", 0, "a")) is a  # refresh a's recency
+    cache.put(("g", 0, "c"), c)  # 120 bytes total -> evicts LRU (b)
+    assert cache.get(("g", 0, "b")) is None
+    assert cache.get(("g", 0, "a")) is a
+    assert cache.get(("g", 0, "c")) is c
+    # an oversized slice is never cached
+    cache.put(("g", 0, "huge"), np.zeros(1000, np.int32))
+    assert cache.get(("g", 0, "huge")) is None

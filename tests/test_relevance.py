@@ -1,0 +1,75 @@
+"""Unit tests for the §14 ranking spec (``search/relevance.py``).
+
+Pins the documented ordering contract: decreasing score, doc_id ascending on
+ties, fragments sorted by (start, end), input-order-independent float sums,
+and the empty/degenerate cases.
+"""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.postings import SearchResult
+from repro.search.relevance import fragment_score, rank_documents
+
+
+def test_fragment_score_examples():
+    assert fragment_score(SearchResult(0, 5, 5)) == 1.0  # single word
+    assert fragment_score(SearchResult(0, 3, 4)) == 0.25  # span 1
+    assert fragment_score(SearchResult(0, 0, 9)) == 1.0 / 100.0
+
+
+def test_empty_and_degenerate_inputs():
+    assert rank_documents([]) == []
+    assert rank_documents(set()) == []
+    assert rank_documents([SearchResult(1, 0, 1)], top_k=0) == []
+    assert rank_documents([SearchResult(1, 0, 1)], top_k=-3) == []
+
+
+def test_score_ties_break_by_ascending_doc_id():
+    # four docs with identical fragment shapes -> identical scores
+    frags = [SearchResult(d, 0, 2) for d in (9, 2, 7, 4)]
+    ranked = rank_documents(frags, top_k=3)
+    assert [doc for doc, _, _ in ranked] == [2, 4, 7]  # tie -> doc_id asc
+    scores = {score for _, score, _ in ranked}
+    assert len(scores) == 1  # genuinely tied
+
+
+def test_fragments_sorted_within_document():
+    frags = [
+        SearchResult(5, 10, 12),
+        SearchResult(5, 0, 3),
+        SearchResult(5, 4, 4),
+    ]
+    ((doc, _, out),) = rank_documents(frags, top_k=1)
+    assert doc == 5
+    assert [(f.start, f.end) for f in out] == [(0, 3), (4, 4), (10, 12)]
+
+
+def test_ranking_is_input_order_independent():
+    """Scores are float sums; the documented contract is that summation runs
+    in sorted fragment order, so every permutation (and set iteration order)
+    yields bit-identical scores and ranking."""
+    rng = random.Random(7)
+    frags = list(
+        {
+            SearchResult(doc_id=d, start=s, end=s + span)
+            for d in range(12)
+            for s, span in [
+                (rng.randrange(50), rng.randrange(9)) for _ in range(17)
+            ]
+        }
+    )
+    baseline = rank_documents(sorted(frags), top_k=12)
+    for _ in range(10):
+        shuffled = frags[:]
+        rng.shuffle(shuffled)
+        assert rank_documents(shuffled, top_k=12) == baseline
+    assert rank_documents(set(frags), top_k=12) == baseline
+
+
+def test_top_k_cut_is_deterministic_under_boundary_ties():
+    # two tied docs straddle the top_k boundary: the cut keeps the lower id
+    frags = [SearchResult(3, 0, 1), SearchResult(8, 10, 11), SearchResult(1, 4, 4)]
+    ranked = rank_documents(frags, top_k=2)
+    assert [doc for doc, _, _ in ranked] == [1, 3]  # 1.0 first, then tie 3 < 8

@@ -1,0 +1,119 @@
+"""Docstring audit for the public ``repro.search`` / ``repro.index`` APIs.
+
+The repo's documentation contract (ISSUE 3 satellite): every public class
+and module-level function of the search and index layers must state
+
+* its **paper-§ anchor** — a ``§`` reference tying the code to the source
+  paper or to a stable ``DESIGN.md`` section; and
+* (at module level) its **exactness contract** — what the code promises to
+  be exact/identical/equal to (the differential harness pins these).
+
+``pydocstyle`` is not available in the minimal container, so this is a
+self-contained stdlib checker with exactly those two project-specific rules;
+CI runs it next to the doctest step (``.github/workflows/ci.yml``), and
+``tests/test_docstrings.py`` enforces it in the tier-1 suite.
+
+Usage::
+
+    PYTHONPATH=src python tools/docstring_audit.py [-v]
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import pkgutil
+import sys
+
+PACKAGES = ("repro.search", "repro.index")
+
+# module docstrings must state what the code is exact with respect to
+EXACTNESS_KEYWORDS = (
+    "exact",
+    "identical",
+    "equality",
+    "ground truth",
+    "must reproduce",
+)
+
+ANCHOR = "§"
+
+
+def iter_modules(package_name: str):
+    pkg = importlib.import_module(package_name)
+    yield pkg
+    for info in pkgutil.iter_modules(pkg.__path__, prefix=package_name + "."):
+        yield importlib.import_module(info.name)
+
+
+def public_symbols(module):
+    """Top-level classes/functions the module itself defines and exports."""
+    names = getattr(module, "__all__", None)
+    if names is None:
+        names = [n for n in vars(module) if not n.startswith("_")]
+    for name in names:
+        obj = getattr(module, name, None)
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue
+        if getattr(obj, "__module__", None) != module.__name__:
+            continue  # re-export: audited where it is defined
+        yield name, obj
+
+
+def audit(verbose: bool = False) -> list[str]:
+    problems: list[str] = []
+    n_modules = n_symbols = 0
+    for package in PACKAGES:
+        for module in iter_modules(package):
+            is_init = module.__name__.rsplit(".", 1)[-1] in (
+                "search", "index",
+            )
+            doc = inspect.getdoc(module) or ""
+            if not is_init:
+                n_modules += 1
+                if not doc:
+                    problems.append(f"{module.__name__}: missing module docstring")
+                else:
+                    if ANCHOR not in doc:
+                        problems.append(
+                            f"{module.__name__}: module docstring lacks a "
+                            f"paper-§ anchor"
+                        )
+                    if not any(k in doc.lower() for k in EXACTNESS_KEYWORDS):
+                        problems.append(
+                            f"{module.__name__}: module docstring states no "
+                            f"exactness contract "
+                            f"(one of: {', '.join(EXACTNESS_KEYWORDS)})"
+                        )
+            for name, obj in public_symbols(module):
+                n_symbols += 1
+                sdoc = inspect.getdoc(obj) or ""
+                where = f"{module.__name__}.{name}"
+                if not sdoc:
+                    problems.append(f"{where}: missing docstring")
+                elif ANCHOR not in sdoc:
+                    problems.append(f"{where}: docstring lacks a paper-§ anchor")
+                elif verbose:
+                    print(f"ok  {where}")
+    if verbose or not problems:
+        print(
+            f"audited {n_modules} modules, {n_symbols} public symbols "
+            f"across {', '.join(PACKAGES)}: "
+            f"{len(problems)} problem(s)"
+        )
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args()
+    problems = audit(verbose=args.verbose)
+    for p in problems:
+        print(f"FAIL {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
