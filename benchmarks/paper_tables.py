@@ -503,3 +503,103 @@ def bench_indexing(n_docs=120, doc_len=180, n_batches=6, quick=False):
         "results_match_rebuild": bool(eq_pin and eq_ref),
         "mismatch_reason": "; ".join(mismatch),
     }
+
+
+def bench_persistence(n_docs=120, doc_len=180, n_batches=4, quick=False):
+    """Durable index store (DESIGN.md §12): snapshot/restore throughput,
+    cold-boot-from-snapshot vs full-rebuild speedup, on-disk compression.
+
+    Reported:
+      * ``snapshot``  — wall time + docs/sec to write an atomic ``snap_<N>``
+        (delta+bitpacked segment stores + pre-lemmatized documents);
+      * ``rebuild``   — what a snapshot-less server pays at boot:
+        re-lemmatize the corpus texts and ``build_indexes`` from scratch;
+      * ``restore``   — the §12 warm start: manifest + document parse +
+        ``mmap``; postings decode lazily on first touch, so this is the
+        time-to-first-servable-query, and ``speedup_vs_rebuild`` =
+        rebuild/restore is the cold-boot claim CI gates at >= 5x;
+      * ``first_touch`` — forcing every posting decode (a full-corpus scan:
+        the worst case the lazy boot amortizes);
+      * ``compression`` — posting+NSW blob bytes on disk vs the
+        ``size_bytes()`` in-memory footprint of the same segments; CI gates
+        ``ratio`` >= 1.5x (the §12.1 codec floor);
+      * ``restore_equality`` — the restored view is ``index_sets_equal``-
+        identical to the live one (gated, like every §12 exactness claim).
+    """
+    import shutil
+    import tempfile
+    from pathlib import Path
+
+    from repro.index import IncrementalIndexer, index_sets_equal
+    from repro.index.builder import build_indexes as _build
+    from repro.index.corpus import DocumentStore
+
+    if quick:
+        n_docs, doc_len, n_batches = 60, 120, 3
+    store = synthesize_corpus(n_docs=n_docs, doc_len=doc_len, vocab_size=2000, seed=23)
+    texts = [d.text for d in store.documents]
+    batch = max(1, len(texts) // n_batches)
+
+    ix = IncrementalIndexer(sw_count=80, fu_count=300, max_distance=5,
+                            lemmatizer=store.lemmatizer)
+    for i in range(0, len(texts), batch):
+        ix.add_documents(texts[i : i + batch])
+        ix.commit()
+    ids = sorted(ix.documents)
+    for victim in ids[::10]:  # ~10% tombstones ride along in the snapshot
+        ix.delete_document(victim)
+
+    tmpdir = Path(tempfile.mkdtemp(prefix="bench_persist_"))
+    try:
+        t0 = time.perf_counter()
+        snap_path = ix.snapshot(tmpdir)
+        t_snapshot = time.perf_counter() - t0
+
+        mem_bytes = sum(seg.index.size_bytes()["total"] for seg in ix.segments)
+        blob_bytes = sum(
+            f.stat().st_size
+            for seg_dir in snap_path.glob("seg_*")
+            for f in (seg_dir / "postings.bin", seg_dir / "nsw.bin")
+        )
+        disk_total = sum(f.stat().st_size for f in snap_path.rglob("*") if f.is_file())
+
+        # the snapshot-less cold boot: re-lemmatize + rebuild from texts
+        t0 = time.perf_counter()
+        rebuilt_store = DocumentStore.from_texts([store.documents[i].text for i in sorted(ix.documents)])
+        _build(rebuilt_store, sw_count=80, fu_count=300, max_distance=5)
+        t_rebuild = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        rx = IncrementalIndexer.restore(tmpdir, lemmatizer=store.lemmatizer)
+        t_restore = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        restored_view = rx.index.to_index_set()  # forces every lazy decode
+        t_touch = time.perf_counter() - t0
+
+        eq, why = index_sets_equal(restored_view, ix.index.to_index_set())
+    finally:
+        shutil.rmtree(tmpdir, ignore_errors=True)
+
+    n_live = len(ix.documents)
+    return {
+        "n_docs": n_live,
+        "doc_len": doc_len,
+        "segments": len(ix.segments),
+        "snapshot": {"sec": t_snapshot, "docs_per_sec": n_live / max(t_snapshot, 1e-9)},
+        "rebuild": {"sec": t_rebuild, "docs_per_sec": n_live / max(t_rebuild, 1e-9)},
+        "restore": {
+            "sec": t_restore,
+            "docs_per_sec": n_live / max(t_restore, 1e-9),
+            "speedup_vs_rebuild": t_rebuild / max(t_restore, 1e-9),
+        },
+        "first_touch": {"sec": t_touch},
+        "compression": {
+            "memory_bytes": int(mem_bytes),
+            "posting_blob_bytes": int(blob_bytes),
+            "snapshot_bytes_total": int(disk_total),
+            "ratio": mem_bytes / max(blob_bytes, 1),
+        },
+        "restore_equality": bool(eq),
+        "mismatch_reason": "" if eq else why,
+    }

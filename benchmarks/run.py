@@ -22,6 +22,7 @@ from benchmarks.paper_tables import (  # noqa: E402
     bench_duplicates,
     bench_frontend,
     bench_indexing,
+    bench_persistence,
     bench_serving,
     bench_serving_results_match,
     bench_vectorized,
@@ -120,6 +121,32 @@ def main() -> None:
     if not indexing["results_match_rebuild"]:
         print(f"indexing_results_MISMATCH,0,{indexing['mismatch_reason']}")
         sys.exit(1)
+
+    # ---- durable index store: snapshot / restore / compression --------------
+    persistence = bench_persistence(quick=args.quick)
+    for path in ("snapshot", "rebuild", "restore"):
+        print(f"persistence_{path},{persistence[path]['sec']*1e6:.0f},"
+              f"docs_per_sec={persistence[path]['docs_per_sec']:.1f}")
+    print(f"persistence_cold_boot,{persistence['restore']['sec']*1e6:.0f},"
+          f"speedup_vs_rebuild={persistence['restore']['speedup_vs_rebuild']:.1f};"
+          f"first_touch_us={persistence['first_touch']['sec']*1e6:.0f}")
+    print(f"persistence_compression,{persistence['compression']['posting_blob_bytes']},"
+          f"ratio={persistence['compression']['ratio']:.2f};"
+          f"memory_bytes={persistence['compression']['memory_bytes']}")
+    # CI gates (benchmarks/README.md): restore must be exact, the §12.1 codec
+    # must actually compress, and the cold-boot claim must hold with margin
+    if not persistence["restore_equality"]:
+        print(f"persistence_restore_MISMATCH,0,{persistence['mismatch_reason']}")
+        sys.exit(1)
+    if persistence["compression"]["ratio"] < 1.5:
+        print(f"persistence_compression_LOW,0,"
+              f"ratio={persistence['compression']['ratio']:.2f}")
+        sys.exit(1)
+    if persistence["restore"]["speedup_vs_rebuild"] < 5.0:
+        print(f"persistence_cold_boot_SLOW,0,"
+              f"speedup={persistence['restore']['speedup_vs_rebuild']:.1f}")
+        sys.exit(1)
+    indexing["persistence"] = persistence
     if args.json:
         out_path = Path(__file__).parent.parent / "BENCH_indexing.json"
         out_path.write_text(json.dumps(indexing, indent=2) + "\n")

@@ -1,3 +1,19 @@
-from .checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint
+from .checkpoint import (
+    CheckpointManager,
+    fsync_json,
+    latest_numbered,
+    replace_dir,
+    restore_checkpoint,
+    retain_latest,
+    save_checkpoint,
+)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "fsync_json",
+    "replace_dir",
+    "retain_latest",
+    "latest_numbered",
+]

@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing.
+"""Fault-tolerant checkpointing and durable-write primitives (DESIGN.md §12.4).
 
 Design points (1000+-node deployments):
 
@@ -6,8 +6,12 @@ Design points (1000+-node deployments):
   the pytree structure and the *PartitionSpec* strings.  Restore re-shards to
   whatever mesh the job comes back with (elastic re-shard: a 512-chip job can
   resume on 256 chips).
-* **Atomicity** — writes go to ``step_N.tmp/`` and are renamed only after the
+* **Atomicity** — writes go to ``<name>.tmp/`` and are renamed only after the
   manifest fsyncs; a crash mid-write never corrupts the latest checkpoint.
+  The write/rename/retention primitives (``fsync_json``, ``replace_dir``,
+  ``retain_latest``, ``latest_numbered``) are shared with the durable index
+  store (``index/store.py``, DESIGN.md §12), so both subsystems have ONE
+  crash-safety story.
 * **Double buffering / retention** — keep the last ``keep`` checkpoints;
   deletion only after a newer one is durable.
 * **Async** — ``save_async`` snapshots to host memory (device_get) on the
@@ -15,6 +19,10 @@ Design points (1000+-node deployments):
   blocks for the copy, not the I/O.
 * **Data-pipeline state** — the sampler/shard cursor is part of the payload,
   so restarts are bit-identical (no skipped or repeated batches).
+
+Exactness contract: ``restore_checkpoint(save_checkpoint(payload))`` returns
+arrays bit-identical to the saved host copies; restarts resume the data
+pipeline bit-identically (no skipped or repeated batches).
 """
 
 from __future__ import annotations
@@ -31,9 +39,91 @@ import numpy as np
 
 import jax
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "CheckpointManager",
+    "fsync_json",
+    "replace_dir",
+    "retain_latest",
+    "latest_numbered",
+]
 
 _MANIFEST = "manifest.json"
+
+
+# ---------------------------------------------------------------------------
+# durable-write primitives (shared with index/store.py — DESIGN.md §12.4)
+# ---------------------------------------------------------------------------
+
+
+def fsync_json(path: str | Path, obj: Any) -> None:
+    """Dump ``obj`` as JSON and fsync before returning (DESIGN.md §12.4).
+
+    The manifest fsync is the durability point of every atomic directory
+    write: once it returns, a rename of the enclosing directory publishes a
+    complete, self-consistent artifact.
+    """
+    with open(path, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def replace_dir(tmp: str | Path, final: str | Path) -> None:
+    """Publish ``tmp`` as ``final`` without ever exposing a partial artifact
+    (DESIGN.md §12.4).
+
+    Directories cannot be renamed over on POSIX, so an existing ``final``
+    is first renamed aside to ``<final>.old`` (atomic), then ``tmp`` is
+    renamed into place (atomic), then the old copy is deleted.  No reader
+    ever sees a half-written directory under the final name; a crash
+    between the two renames loses only the *name* — the complete previous
+    artifact survives as ``<final>.old`` (and numbered readers like
+    ``latest_numbered`` simply fall back to the previous entry).
+    """
+    tmp, final = Path(tmp), Path(final)
+    old = final.with_name(final.name + ".old")
+    if old.exists():
+        shutil.rmtree(old)
+    had_old = False
+    if final.exists():
+        final.rename(old)
+        had_old = True
+    tmp.rename(final)
+    if had_old:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def retain_latest(directory: str | Path, prefix: str, keep: int) -> None:
+    """Delete all but the ``keep`` highest-numbered ``<prefix>_<N>`` dirs
+    (DESIGN.md §12.4 retention; ``keep <= 0`` retains everything)."""
+    if keep <= 0:
+        return
+    entries = sorted(_numbered(Path(directory), prefix))
+    for _, p in entries[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_numbered(directory: str | Path, prefix: str) -> int | None:
+    """Highest N among complete ``<prefix>_<N>`` dirs — complete means the
+    manifest exists, i.e. the §12.4 rename happened (``None`` if none)."""
+    entries = _numbered(Path(directory), prefix)
+    return max((n for n, _ in entries), default=None)
+
+
+def _numbered(directory: Path, prefix: str) -> list[tuple[int, Path]]:
+    out: list[tuple[int, Path]] = []
+    for p in directory.glob(f"{prefix}_*"):
+        if not p.is_dir() or p.name.endswith(".tmp"):
+            continue
+        if not (p / _MANIFEST).exists():
+            continue
+        try:
+            out.append((int(p.name.rsplit("_", 1)[1]), p))
+        except ValueError:
+            continue
+    return out
 
 
 def _flatten(tree: Any) -> tuple[list[np.ndarray], Any]:
@@ -42,7 +132,8 @@ def _flatten(tree: Any) -> tuple[list[np.ndarray], Any]:
 
 
 def save_checkpoint(directory: str | Path, step: int, payload: Any, keep: int = 3) -> Path:
-    """Atomic synchronous save of an arbitrary pytree ``payload``."""
+    """Atomic synchronous save of an arbitrary pytree ``payload``
+    (DESIGN.md §12.4 write protocol: tmp dir -> manifest fsync -> rename)."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     tmp = directory / f"step_{step}.tmp"
@@ -60,35 +151,15 @@ def save_checkpoint(directory: str | Path, step: int, payload: Any, keep: int = 
         "leaf_shapes": [list(l.shape) for l in leaves],
         "leaf_dtypes": [str(l.dtype) for l in leaves],
     }
-    with open(tmp / _MANIFEST, "w") as f:
-        json.dump(meta, f)
-        f.flush()
-        os.fsync(f.fileno())
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)  # atomic on POSIX
-    _gc(directory, keep)
+    fsync_json(tmp / _MANIFEST, meta)
+    replace_dir(tmp, final)
+    retain_latest(directory, "step", keep)
     return final
 
 
-def _gc(directory: Path, keep: int) -> None:
-    steps = sorted(
-        (int(p.name.split("_")[1]), p)
-        for p in directory.glob("step_*")
-        if p.is_dir() and not p.name.endswith(".tmp")
-    )
-    for _, p in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(p, ignore_errors=True)
-
-
 def latest_step(directory: str | Path) -> int | None:
-    directory = Path(directory)
-    steps = [
-        int(p.name.split("_")[1])
-        for p in directory.glob("step_*")
-        if p.is_dir() and not p.name.endswith(".tmp") and (p / _MANIFEST).exists()
-    ]
-    return max(steps) if steps else None
+    """Highest durable checkpoint step in ``directory`` (DESIGN.md §12.4)."""
+    return latest_numbered(directory, "step")
 
 
 def restore_checkpoint(
@@ -99,7 +170,7 @@ def restore_checkpoint(
 ) -> tuple[Any, int] | None:
     """Restore into the structure of ``template``; optionally re-shard with
     ``shardings`` (a pytree of NamedSharding for the *current* mesh —
-    elastic resume)."""
+    elastic resume, DESIGN.md §12.4)."""
     directory = Path(directory)
     step = step if step is not None else latest_step(directory)
     if step is None:
@@ -119,7 +190,8 @@ def restore_checkpoint(
 
 
 class CheckpointManager:
-    """Async double-buffered manager with restart-counter bookkeeping."""
+    """Async double-buffered manager with restart-counter bookkeeping
+    (DESIGN.md §12.4: one write in flight, errors surfaced on ``wait``)."""
 
     def __init__(self, directory: str | Path, keep: int = 3):
         self.directory = Path(directory)

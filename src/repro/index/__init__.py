@@ -8,6 +8,13 @@ from .incremental import (
     generation_token,
     index_sets_equal,
 )
+from .store import (
+    StoreError,
+    StoredIndexSet,
+    latest_snapshot,
+    load_snapshot,
+    save_snapshot,
+)
 
 __all__ = [
     "Document",
@@ -23,4 +30,9 @@ __all__ = [
     "as_index_set",
     "generation_token",
     "index_sets_equal",
+    "StoreError",
+    "StoredIndexSet",
+    "latest_snapshot",
+    "load_snapshot",
+    "save_snapshot",
 ]

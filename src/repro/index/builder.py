@@ -27,9 +27,19 @@ import numpy as np
 from ..core.lemma import FLList, LemmaType
 from .corpus import DocumentStore
 
-__all__ = ["IndexSet", "build_indexes", "build_segment", "NSWRecords"]
+__all__ = ["IndexSet", "build_indexes", "build_segment", "NSWRecords", "POSTING_WIDTH"]
 
 _POSTING_BYTES = {1: 8, 2: 12, 3: 16}  # int32 record sizes per key arity
+
+# §4 row widths (int32 columns) per posting family — the ONE table the
+# incremental merge layer and the on-disk store both key their layouts by
+POSTING_WIDTH = {
+    "ordinary": 2,
+    "stop_single": 2,
+    "pair": 3,
+    "stop_pair": 3,
+    "triple": 4,
+}
 
 
 @dataclass

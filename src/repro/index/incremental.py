@@ -59,7 +59,7 @@ import numpy as np
 
 from ..core.keys import lemma_order_signature
 from ..core.lemma import FLList, Lemmatizer
-from .builder import IndexSet, NSWRecords, build_segment
+from .builder import IndexSet, NSWRecords, POSTING_WIDTH, build_segment
 from .corpus import Document, DocumentStore
 
 __all__ = [
@@ -72,7 +72,7 @@ __all__ = [
     "merge_posting_arrays",
 ]
 
-_WIDTH = {"ordinary": 2, "stop_single": 2, "pair": 3, "stop_pair": 3, "triple": 4}
+_WIDTH = POSTING_WIDTH
 
 
 # ---------------------------------------------------------------------------
@@ -472,10 +472,17 @@ class IncrementalIndexer:
         # changes (commit, committed delete, compact) — the cache-invalidation
         # token the serving frontend keys its LRU caches by (DESIGN.md §11)
         self._mutations = 0
+        # restore epoch (DESIGN.md §12.5): 0 for a freshly built indexer,
+        # bumped past the snapshot's stored epoch on every restore so tokens
+        # from different boots of the same snapshot lineage never collide
+        self._restore_epoch = 0
 
     @property
-    def generation_token(self) -> int:
-        """Monotone token identifying the current query-visible index state.
+    def generation_token(self):
+        """Token identifying the current query-visible index state — an int
+        (the monotone mutation counter) for a freshly built indexer, or an
+        ``(epoch, mutations)`` tuple after a snapshot restore (DESIGN.md
+        §12.5).
 
         Bumps on every ``commit``, committed ``delete_document`` and
         ``compact`` — any event that can change the fragment set an engine
@@ -483,8 +490,57 @@ class IncrementalIndexer:
         DESIGN.md) key entries by this token, so a generation bump
         invalidates them without any explicit flush; buffered (uncommitted)
         adds do not bump it because they are not query-visible yet.
+
+        Across restarts (§12.5): ``restore`` resumes the stored mutation
+        counter under a fresh epoch claimed from the snapshot lineage's
+        persisted ``restore_epoch`` counter — strictly greater than the
+        stored epoch AND any epoch an earlier boot of the same lineage
+        claimed.  Equal tokens therefore still imply equal index states
+        (even across sibling boots of one snapshot), and a state the
+        *previous* process reached after the snapshot point can never share
+        a token with a state this process reaches — pre-restart cached
+        results are correctly invalidated, post-restart caches warm
+        normally.
         """
+        if self._restore_epoch:
+            return (self._restore_epoch, self._mutations)
         return self._mutations
+
+    # -- durability (DESIGN.md §12; implementation in index/store.py) -------
+
+    def snapshot(self, directory, keep: int = 2):
+        """Freeze this indexer into ``<directory>/snap_<N>`` — the durable
+        §12.2 on-disk form: delta+bitpacked segment stores, pre-lemmatized
+        documents, tombstones, FL state and the §12.5 generation token.
+        Atomic (tmp -> fsync -> rename) with ``keep``-newest retention;
+        returns the published snapshot path."""
+        from .store import save_snapshot
+
+        return save_snapshot(self, directory, keep=keep)
+
+    @classmethod
+    def restore(
+        cls,
+        directory,
+        snapshot_id: int | None = None,
+        use_mmap: bool = True,
+        verify: bool = True,
+        lemmatizer: Lemmatizer | None = None,
+    ) -> "IncrementalIndexer":
+        """Warm-start an indexer from a §12.2 snapshot: segments serve
+        lazily from ``mmap`` pages, nothing is replayed or re-lemmatized,
+        and the restored index is exact (``index_sets_equal`` vs the
+        snapshotted live view — the §12 contract the differential harness
+        pins).  Raises ``StoreError`` on corruption."""
+        from .store import load_snapshot
+
+        return load_snapshot(
+            directory,
+            snapshot_id=snapshot_id,
+            use_mmap=use_mmap,
+            verify=verify,
+            lemmatizer=lemmatizer,
+        )
 
     # -- ingest / delete ----------------------------------------------------
 

@@ -16,7 +16,13 @@ Useful flags:
 * ``--repeat N``      serve the query list N times to show cache hit rates;
 * ``--algorithm``     SE1/SE2.1–SE2.4 host loops or the fused device batch
                       (``--no-frontend`` path only);
-* ``--kill-shard``    degraded fan-out demo (``--no-frontend`` path only).
+* ``--kill-shard``    degraded fan-out demo (``--no-frontend`` path only);
+* ``--snapshot-dir``  durable-index warm start (DESIGN.md §12): if the
+                      directory holds a service snapshot, restore it and
+                      serve straight from mmap'd disk pages — no corpus
+                      build, no re-lemmatization; otherwise build the
+                      corpus once and snapshot into the directory so the
+                      NEXT run warm-starts (the crash-recovery loop).
 """
 
 from __future__ import annotations
@@ -72,18 +78,63 @@ def main() -> None:
                          "result-cache hit rate in frontend mode)")
     ap.add_argument("--explain", action="store_true",
                     help="print each query's plan before serving")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="warm start from (or bootstrap) a durable index "
+                         "snapshot directory (DESIGN.md §12)")
     args = ap.parse_args()
+
+    import time
+    from pathlib import Path
 
     from ..index.corpus import synthesize_corpus
     from ..search.distributed import ShardedSearchService
 
-    print(f"building corpus ({args.n_docs} docs) and {args.n_shards} index shards...")
-    store = synthesize_corpus(n_docs=args.n_docs, seed=7)
-    svc = ShardedSearchService(
-        store, n_shards=args.n_shards, sw_count=args.sw_count,
-        fu_count=args.fu_count, max_distance=args.max_distance,
-        algorithm=args.algorithm,
-    )
+    svc = None
+    if args.snapshot_dir and (Path(args.snapshot_dir) / "service.json").exists():
+        t0 = time.perf_counter()
+        svc = ShardedSearchService.restore(args.snapshot_dir)
+        if args.algorithm != ap.get_default("algorithm"):
+            svc.algorithm = args.algorithm  # explicit CLI choice wins
+        else:
+            args.algorithm = svc.algorithm  # else keep the stored engine
+        n_docs = sum(len(ix.documents) for ix in svc.indexers)
+        print(f"warm start: restored {svc.n_shards} shards / {n_docs} docs "
+              f"from {args.snapshot_dir} in "
+              f"{(time.perf_counter() - t0) * 1000:.0f} ms (no rebuild)")
+        # build flags describe a NEW corpus; a warm start serves the stored
+        # one — surface any conflicting explicit flags instead of silently
+        # dropping them (delete the snapshot dir to rebuild)
+        ignored = [
+            f"--{name.replace('_', '-')}={getattr(args, name)} "
+            f"(snapshot has {stored})"
+            for name, stored in (
+                ("n_shards", svc.n_shards),
+                ("sw_count", svc.sw_count),
+                ("fu_count", svc.fu_count),
+                ("max_distance", svc.max_distance),
+                ("n_docs", n_docs),
+            )
+            # flag non-default (user typed it) AND disagreeing with the store
+            if getattr(args, name) != ap.get_default(name)
+            and getattr(args, name) != stored
+        ]
+        if ignored:
+            print("note: warm start ignores build flags: " + ", ".join(ignored))
+    if svc is None:
+        print(f"building corpus ({args.n_docs} docs) and {args.n_shards} index shards...")
+        t0 = time.perf_counter()
+        store = synthesize_corpus(n_docs=args.n_docs, seed=7)
+        svc = ShardedSearchService(
+            store, n_shards=args.n_shards, sw_count=args.sw_count,
+            fu_count=args.fu_count, max_distance=args.max_distance,
+            algorithm=args.algorithm,
+            incremental=bool(args.snapshot_dir),
+        )
+        build_ms = (time.perf_counter() - t0) * 1000
+        if args.snapshot_dir:
+            svc.snapshot(args.snapshot_dir)
+            print(f"cold start: built in {build_ms:.0f} ms, snapshotted to "
+                  f"{args.snapshot_dir} (rerun to warm-start)")
 
     # --kill-shard / a non-default --algorithm only make sense on the raw
     # engine path: honor them there instead of silently ignoring them

@@ -215,6 +215,97 @@ class ShardedSearchService:
                 "need ShardedSearchService(..., incremental=True)"
             )
 
+    # ---- durability (DESIGN.md §12.2: one snapshot store per shard) -------
+
+    def snapshot(self, directory, keep: int = 2):
+        """Snapshot every shard's indexer into ``<directory>/shard_<i>/``
+        plus a fsync'd ``service.json`` naming the topology (DESIGN.md
+        §12.2).  Per-shard writes are individually atomic; the service
+        manifest is written last, so a reader that finds it finds complete
+        shard snapshots.  Returns the snapshot root directory."""
+        from pathlib import Path
+
+        from ..checkpoint import fsync_json, retain_latest
+        from ..index.store import FORMAT_VERSION, SNAPSHOT_PREFIX
+
+        self._require_incremental()
+        directory = Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        # shards snapshot with retention OFF: GC only runs after the new
+        # manifest is durably published, so a crash-looping snapshotter can
+        # never collect a snapshot the live service.json still pins
+        shard_snapshots = []
+        for i, ix in enumerate(self.indexers):
+            path = ix.snapshot(directory / f"shard_{i:02d}", keep=0)
+            shard_snapshots.append(int(path.name.rsplit("_", 1)[1]))
+        # written LAST and published atomically (fsync tmp -> rename): pins
+        # one consistent cross-shard snapshot set, so a crash mid-snapshot
+        # leaves the previous manifest and the set it pins untouched
+        manifest_tmp = directory / "service.json.tmp"
+        fsync_json(manifest_tmp, {
+            "format_version": FORMAT_VERSION,
+            "kind": "service",
+            "shard_snapshots": shard_snapshots,
+            "n_shards": self.n_shards,
+            "sw_count": self.sw_count,
+            "fu_count": self.fu_count,
+            "max_distance": self.max_distance,
+            "algorithm": self.algorithm,
+            "use_kernel": self.use_kernel,
+            "doc_len": self.doc_len,
+        })
+        manifest_tmp.replace(directory / "service.json")
+        for i in range(self.n_shards):
+            retain_latest(directory / f"shard_{i:02d}", SNAPSHOT_PREFIX, keep)
+        return directory
+
+    @classmethod
+    def restore(
+        cls,
+        directory,
+        use_mmap: bool = True,
+        verify: bool = True,
+        lemmatizer: Lemmatizer | None = None,
+    ) -> "ShardedSearchService":
+        """Warm-start a sharded service from a ``snapshot`` directory
+        (DESIGN.md §12.2): every shard restores its latest snapshot lazily
+        (``mmap``-backed segments, nothing replayed), the shared FL-list and
+        doc-id router resume from the stored state, and the restored service
+        returns fragment sets identical to the snapshotted live one (the
+        §12 exactness contract).  Raises ``StoreError`` on corruption."""
+        from pathlib import Path
+
+        from ..index.incremental import IncrementalIndexer
+        from ..index.store import _load_manifest
+
+        directory = Path(directory)
+        m = _load_manifest(directory / "service.json", expect_kind="service")
+
+        svc = cls.__new__(cls)
+        svc.algorithm = m["algorithm"]
+        svc.use_kernel = m["use_kernel"]
+        svc.doc_len = m["doc_len"]
+        svc.max_distance = m["max_distance"]
+        svc.n_shards = m["n_shards"]
+        svc.sw_count = m["sw_count"]
+        svc.fu_count = m["fu_count"]
+        svc.lemmatizer = lemmatizer or Lemmatizer()
+        svc._static_shards = []
+        shard_snapshots = m.get("shard_snapshots") or [None] * svc.n_shards
+        svc.indexers = [
+            IncrementalIndexer.restore(
+                directory / f"shard_{i:02d}",
+                snapshot_id=shard_snapshots[i],
+                use_mmap=use_mmap,
+                verify=verify,
+                lemmatizer=svc.lemmatizer,
+            )
+            for i in range(svc.n_shards)
+        ]
+        svc.fl = svc.indexers[0].fl
+        svc._next_doc_id = max(ix._next_id for ix in svc.indexers)
+        return svc
+
     def search(
         self, query: str, top_k: int = 10, dead_shards: Sequence[int] = ()
     ) -> QueryResponse:

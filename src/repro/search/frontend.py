@@ -189,6 +189,49 @@ class ServingFrontend:
         self._partials = 0
         self._served = 0
 
+    # ---- warm start (DESIGN.md §12.5) ------------------------------------
+
+    @classmethod
+    def from_snapshot(
+        cls,
+        directory,
+        *,
+        use_mmap: bool = True,
+        verify: bool = True,
+        lemmatizer: Lemmatizer | None = None,
+        **kwargs,
+    ) -> "ServingFrontend":
+        """Warm-start a frontend from a §12.2 snapshot directory: a sharded
+        service snapshot (``service.json`` present) restores a
+        ``ShardedSearchService``, anything else restores a single
+        ``IncrementalIndexer`` — in both cases segments serve lazily from
+        ``mmap`` pages, nothing is replayed, and the restored source's
+        generation token resumes under a bumped restore epoch so caches can
+        never serve a pre-restart entry against a post-restart index state
+        (§12.5 invariant; exactness pinned by ``tests/test_store.py``).
+        Snapshots store lemma *streams*, not the lemmatizer's rule set —
+        a stack built with a customized ``Lemmatizer`` must pass the same
+        one here (it reaches both the restored source and the planner's
+        query expansion), or restored query-time lemmatization diverges
+        from the pre-restart stack.  ``kwargs`` are the normal frontend
+        options."""
+        from pathlib import Path
+
+        from ..index.incremental import IncrementalIndexer
+
+        directory = Path(directory)
+        if (directory / "service.json").exists():
+            from .distributed import ShardedSearchService
+
+            source = ShardedSearchService.restore(
+                directory, use_mmap=use_mmap, verify=verify, lemmatizer=lemmatizer
+            )
+        else:
+            source = IncrementalIndexer.restore(
+                directory, use_mmap=use_mmap, verify=verify, lemmatizer=lemmatizer
+            )
+        return cls(source, lemmatizer=lemmatizer, **kwargs)
+
     # ---- public serving API ----------------------------------------------
 
     def search(self, query: str, top_k: int = 10, deadline_sec: float | None = None):

@@ -13,6 +13,11 @@ Pins the two contracts every engine-level refactor must preserve:
    surviving documents, and searching it returns byte-identical fragments
    across all engines.
 
+3. **Snapshot/restore == live** — a DESIGN.md §12 snapshot of the
+   post-ops indexer restores to an ``index_sets_equal``-identical index
+   whose lazily decoded postings serve byte-identical fragments through
+   every engine.
+
 Runs under real ``hypothesis`` (fixed seed via ``derandomize``) or the
 deterministic shim — both bounded to a small example budget for CI.
 """
@@ -146,6 +151,48 @@ def test_incremental_matches_rebuild(seed):
     assert not ix.tombstones
     equal, why = index_sets_equal(ix.index.to_index_set(), ix.rebuild_index_set())
     assert equal, f"post-compact: {why}"
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seeds)
+def test_snapshot_restore_matches_live_all_engines(seed):
+    """DESIGN.md §12: after randomized add/delete/compact sequences, a
+    snapshot restored in this process (mmap-backed lazy segments) is
+    byte-identical to the live index and serves identical fragments
+    through scalar SE2.4, vectorized, fused and kernel paths."""
+    import tempfile
+
+    spec = make_corpus(seed, max_docs=8)
+    ix = _run_ops(spec, seed)
+    snap_ctx = tempfile.TemporaryDirectory()
+    with snap_ctx as snap_dir:
+        ix.snapshot(snap_dir)
+        rx = IncrementalIndexer.restore(snap_dir)
+        _check_restored(ix, rx, spec, seed)
+
+
+def _check_restored(ix, rx, spec, seed):
+    equal, why = index_sets_equal(rx.index.to_index_set(), ix.index.to_index_set())
+    assert equal, f"restored != live: {why}"
+    store = ix.surviving_store()
+    for query in make_queries(seed, spec, n_queries=2):
+        for sub in expand_subqueries(query, store.lemmatizer):
+            a, _ = se24_combiner(sub, ix.index)
+            b, _ = se24_combiner(sub, rx.index)
+            assert _frag_set(a) == _frag_set(b), (query, sub, "se2.4 restored != live")
+            va, _ = VectorizedEngine(rx).search_subquery(sub)
+            assert _frag_set(va) == _frag_set(a), (query, sub, "vectorized restored != live")
+        for use_kernel in (False, True):
+            ra = SearchEngine(
+                ix, lemmatizer=store.lemmatizer, algorithm="fused", use_kernel=use_kernel
+            ).search(query, top_k=32)
+            rb = SearchEngine(
+                rx, lemmatizer=store.lemmatizer, algorithm="fused", use_kernel=use_kernel
+            ).search(query, top_k=32)
+            assert _response_frags(ra) == _response_frags(rb), (
+                query,
+                f"fused(kernel={use_kernel}) restored != live",
+            )
 
 
 @settings(max_examples=4, deadline=None, derandomize=True)

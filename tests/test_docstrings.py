@@ -1,9 +1,10 @@
-"""Tier-1 enforcement of the documentation contract (ISSUE 3 satellite).
+"""Tier-1 enforcement of the documentation contract (ISSUE 3 satellite;
+extended to the persistence layers by ISSUE 4).
 
-Every public ``repro.search`` / ``repro.index`` API must state its paper-§
-anchor, and every module its exactness contract — checked by
-``tools/docstring_audit.py`` (the same script the dedicated CI step runs);
-plus the doctest examples embedded in the ranking spec.
+Every public ``repro.search`` / ``repro.index`` / ``repro.checkpoint`` API
+must state its paper-§ anchor, and every module its exactness contract —
+checked by ``tools/docstring_audit.py`` (the same script the dedicated CI
+step runs); plus the doctest examples embedded in the ranking spec.
 """
 
 from __future__ import annotations

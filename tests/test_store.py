@@ -1,0 +1,350 @@
+"""Durable index store round-trip tests (DESIGN.md §12).
+
+Pins the §12 exactness contract end to end: snapshots restore
+byte-identically (``index_sets_equal`` plus per-slice dtype/value equality
+of the lazy decodes), survive tombstones / multi-segment histories /
+FL-drift re-keying / buffered docs, reject corrupted or truncated stores
+loudly, retain atomically with keep-N GC, and resume generation tokens
+under a bumped restore epoch (§12.5).  Warm-started sharded services and
+frontends serve fragment sets identical to their pre-restart selves.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.index import (
+    IncrementalIndexer,
+    PAPER_EXAMPLE_DOCS,
+    StoreError,
+    StoredIndexSet,
+    index_sets_equal,
+    latest_snapshot,
+    synthesize_corpus,
+)
+from repro.index.store import FAMILY_WIDTH
+from repro.search.engine import SearchEngine
+
+
+def _small_indexer(n_docs=24, batches=3, seed=11, sw=30, fu=60):
+    store = synthesize_corpus(n_docs=n_docs, doc_len=60, vocab_size=500, seed=seed)
+    texts = [d.text for d in store.documents]
+    ix = IncrementalIndexer(sw_count=sw, fu_count=fu, max_distance=5,
+                            lemmatizer=store.lemmatizer)
+    step = max(1, len(texts) // batches)
+    for i in range(0, len(texts), step):
+        ix.add_documents(texts[i : i + step])
+        ix.commit()
+    return ix, store
+
+
+def _assert_round_trip(ix, tmp_path, lemmatizer=None):
+    ix.snapshot(tmp_path)
+    rx = IncrementalIndexer.restore(tmp_path, lemmatizer=lemmatizer)
+    eq, why = index_sets_equal(rx.index.to_index_set(), ix.index.to_index_set())
+    assert eq, why
+    return rx
+
+
+# ---------------------------------------------------------------------------
+# round trips
+# ---------------------------------------------------------------------------
+
+
+def test_empty_indexer_round_trip(tmp_path):
+    ix = IncrementalIndexer(sw_count=10, fu_count=10, max_distance=5)
+    rx = _assert_round_trip(ix, tmp_path)
+    assert rx.segments == []
+    assert rx.fl is None
+    resp = SearchEngine(rx).search("who are you", top_k=5)
+    assert resp.docs == []
+
+
+def test_single_and_multi_segment_round_trip(tmp_path):
+    ix, store = _small_indexer()
+    assert len(ix.segments) > 1
+    rx = _assert_round_trip(ix, tmp_path, lemmatizer=store.lemmatizer)
+    # engine fragments identical on both sides
+    for query in ("who are you who", "to be or not to be"):
+        a = SearchEngine(ix, lemmatizer=store.lemmatizer).search(query, top_k=16)
+        b = SearchEngine(rx, lemmatizer=store.lemmatizer).search(query, top_k=16)
+        fa = sorted((d.doc_id, f.start, f.end) for d in a.docs for f in d.fragments)
+        fb = sorted((d.doc_id, f.start, f.end) for d in b.docs for f in d.fragments)
+        assert fa == fb, query
+
+
+def test_tombstones_round_trip_and_compact_after_restore(tmp_path):
+    ix, store = _small_indexer()
+    victims = sorted(ix.documents)[::5]
+    for v in victims:
+        ix.delete_document(v)
+    ix.commit()  # FL refresh over the survivors (rebuild oracle's FL basis)
+    rx = _assert_round_trip(ix, tmp_path, lemmatizer=store.lemmatizer)
+    assert rx.tombstones == ix.tombstones
+    rx.compact()
+    assert not rx.tombstones
+    eq, why = index_sets_equal(rx.index.to_index_set(), rx.rebuild_index_set())
+    assert eq, f"post-restore compact != rebuild: {why}"
+
+
+def test_fl_drift_history_round_trip(tmp_path):
+    """Commits with refresh_fl drift the FL-list across generations
+    (superseded docs, NSW remaps); the snapshot must capture the drifted
+    state exactly and keep drifting after restore."""
+    ix, store = _small_indexer(n_docs=30, batches=5)
+    report = ix.commit()  # extra refresh generation
+    rx = _assert_round_trip(ix, tmp_path, lemmatizer=store.lemmatizer)
+    assert any(seg.superseded for seg in ix.segments) == any(
+        seg.superseded for seg in rx.segments
+    )
+    # keep mutating both sides in lockstep: results must stay identical
+    extra = ["the who are an english rock band", "time and time again and again"]
+    ix.add_documents(extra)
+    rx.add_documents(extra)
+    ix.commit()
+    rx.commit()
+    eq, why = index_sets_equal(rx.index.to_index_set(), ix.index.to_index_set())
+    assert eq, f"post-restore drift commit diverged: {why}"
+
+
+def test_buffered_documents_survive_snapshot(tmp_path):
+    ix, store = _small_indexer()
+    ix.add_documents(["an uncommitted buffered document about war"])
+    rx = _assert_round_trip(ix, tmp_path, lemmatizer=store.lemmatizer)
+    assert len(rx._buffer) == 1
+    ix.commit()
+    rx.commit()
+    eq, why = index_sets_equal(rx.index.to_index_set(), ix.index.to_index_set())
+    assert eq, f"buffered docs lost: {why}"
+
+
+def test_lazy_decodes_are_byte_identical(tmp_path):
+    ix, _ = _small_indexer()
+    ix.snapshot(tmp_path)
+    rx = IncrementalIndexer.restore(tmp_path)
+    for seg_mem, seg_disk in zip(ix.segments, rx.segments):
+        assert isinstance(seg_disk.index, StoredIndexSet)
+        for fname in FAMILY_WIDTH:
+            mem = getattr(seg_mem.index, fname)
+            disk = getattr(seg_disk.index, fname)
+            assert set(mem.keys()) == set(disk.keys()), fname
+            for key in mem:
+                a, b = mem[key], disk[key]
+                assert a.dtype == b.dtype and a.shape == b.shape, (fname, key)
+                assert np.array_equal(a, b), (fname, key)
+        assert set(seg_mem.index.nsw.keys()) == set(seg_disk.index.nsw.keys())
+        for lemma, rec in seg_mem.index.nsw.items():
+            drec = seg_disk.index.nsw[lemma]
+            for f in ("offsets", "stop_lemma", "distance"):
+                a, b = getattr(rec, f), getattr(drec, f)
+                assert a.dtype == b.dtype and np.array_equal(a, b), (lemma, f)
+        # size accounting identical without decoding
+        assert seg_disk.index.size_bytes() == seg_mem.index.size_bytes()
+
+
+# ---------------------------------------------------------------------------
+# corruption rejection
+# ---------------------------------------------------------------------------
+
+
+def test_missing_snapshot_rejected(tmp_path):
+    with pytest.raises(StoreError):
+        IncrementalIndexer.restore(tmp_path)
+
+
+def test_truncated_blob_rejected(tmp_path):
+    ix, _ = _small_indexer(n_docs=10, batches=1)
+    snap = ix.snapshot(tmp_path)
+    blob = next(snap.glob("seg_*/postings.bin"))
+    blob.write_bytes(blob.read_bytes()[:-8])
+    with pytest.raises(StoreError, match="truncated"):
+        IncrementalIndexer.restore(tmp_path)
+
+
+def test_bitflip_rejected_by_crc(tmp_path):
+    ix, _ = _small_indexer(n_docs=10, batches=1)
+    snap = ix.snapshot(tmp_path)
+    blob = next(snap.glob("seg_*/postings.bin"))
+    raw = bytearray(blob.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    blob.write_bytes(bytes(raw))
+    with pytest.raises(StoreError, match="CRC"):
+        IncrementalIndexer.restore(tmp_path)
+    # verify=False skips the CRC scan (documented fast path): no error here
+    IncrementalIndexer.restore(tmp_path, verify=False)
+
+
+def test_corrupt_manifest_rejected(tmp_path):
+    ix, _ = _small_indexer(n_docs=10, batches=1)
+    snap = ix.snapshot(tmp_path)
+    (snap / "manifest.json").write_text("{not json")
+    with pytest.raises(StoreError, match="corrupt manifest"):
+        IncrementalIndexer.restore(tmp_path)
+
+
+def test_unknown_format_version_rejected(tmp_path):
+    ix, _ = _small_indexer(n_docs=10, batches=1)
+    snap = ix.snapshot(tmp_path)
+    m = json.loads((snap / "manifest.json").read_text())
+    m["format_version"] = 999
+    (snap / "manifest.json").write_text(json.dumps(m))
+    with pytest.raises(StoreError, match="format version"):
+        IncrementalIndexer.restore(tmp_path)
+
+
+def test_fl_signature_mismatch_rejected(tmp_path):
+    """A segment keyed under a different FL generation (here: spliced in
+    from a different snapshot) must be refused — §10.2 row generation is
+    FL-relative, so serving it would be silently wrong."""
+    ix, store = _small_indexer(n_docs=12, batches=1, seed=1)
+    other, _ = _small_indexer(n_docs=12, batches=1, seed=2)
+    snap = ix.snapshot(tmp_path / "a")
+    other_snap = other.snapshot(tmp_path / "b")
+    seg = next(snap.glob("seg_*"))
+    other_seg = next(other_snap.glob("seg_*"))
+    shutil.rmtree(seg)
+    shutil.copytree(other_seg, seg)
+    with pytest.raises(StoreError, match="FL signature"):
+        IncrementalIndexer.restore(tmp_path / "a")
+
+
+# ---------------------------------------------------------------------------
+# retention + generation tokens across restarts (§12.5)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_retention_keeps_newest(tmp_path):
+    ix, _ = _small_indexer(n_docs=8, batches=1)
+    for _ in range(3):
+        ix.snapshot(tmp_path, keep=2)
+    names = sorted(p.name for p in tmp_path.glob("snap_*"))
+    assert names == ["snap_1", "snap_2"]
+    assert latest_snapshot(tmp_path) == 2
+    # explicit snapshot_id picks the older retained snapshot
+    rx = IncrementalIndexer.restore(tmp_path, snapshot_id=1)
+    eq, why = index_sets_equal(rx.index.to_index_set(), ix.index.to_index_set())
+    assert eq, why
+
+
+def test_generation_token_resumes_under_new_epoch(tmp_path):
+    ix, _ = _small_indexer(n_docs=8, batches=2)
+    token_live = ix.generation_token
+    ix.snapshot(tmp_path)
+    rx = IncrementalIndexer.restore(tmp_path)
+    # same index state, but a different boot: tokens must not collide with
+    # anything the previous process could have produced after the snapshot
+    assert rx.generation_token == (1, token_live)
+    assert rx.generation_token != token_live
+    rx.add_documents(["one more doc"])
+    rx.commit()
+    assert rx.generation_token == (1, token_live + 1)
+    # a second restart bumps the epoch again
+    rx.snapshot(tmp_path)
+    rx2 = IncrementalIndexer.restore(tmp_path)
+    assert rx2.generation_token == (2, token_live + 1)
+    # SIBLING restores of one snapshot (crash loop) claim distinct epochs
+    # via the persisted lineage counter: two boots that then diverge can
+    # never mint the same token for different states (§12.5)
+    boot_a = IncrementalIndexer.restore(tmp_path)
+    boot_b = IncrementalIndexer.restore(tmp_path)
+    assert boot_a.generation_token != boot_b.generation_token
+    boot_a.add_documents(["boot a text"])
+    boot_a.commit()
+    boot_b.add_documents(["entirely different boot b words"])
+    boot_b.commit()
+    assert boot_a.generation_token != boot_b.generation_token
+
+
+# ---------------------------------------------------------------------------
+# warm-started serving layers
+# ---------------------------------------------------------------------------
+
+
+def _frags(resp):
+    return sorted((d.doc_id, f.start, f.end) for d in resp.docs for f in d.fragments)
+
+
+def test_sharded_service_snapshot_restore(tmp_path):
+    from repro.index import DocumentStore
+    from repro.search.distributed import ShardedSearchService
+
+    store = DocumentStore.from_texts(
+        list(PAPER_EXAMPLE_DOCS) + ["to be or not to be", "i need you now"]
+    )
+    svc = ShardedSearchService(store, n_shards=2, sw_count=20, fu_count=10,
+                               incremental=True)
+    svc.snapshot(tmp_path)
+    restored = ShardedSearchService.restore(tmp_path)
+    assert restored.n_shards == svc.n_shards
+    for query in ("who are you who", "to be or not to be"):
+        assert _frags(restored.search(query, top_k=16)) == _frags(
+            svc.search(query, top_k=16)
+        ), query
+    # tokens resume under per-shard restore epochs: never equal pre-restart
+    assert restored.generation_token != svc.generation_token
+    # mutation endpoints still work after restore
+    restored.add_documents(["a brand new document"])
+    restored.commit()
+
+
+def test_service_manifest_pins_survive_torn_snapshot(tmp_path):
+    """A snapshot run that crashes after writing shard snapshots but before
+    publishing service.json must leave the previous consistent set fully
+    restorable — retention only runs after the manifest publish, so pinned
+    ids are never collected (DESIGN.md §12.4)."""
+    from repro.index import DocumentStore
+    from repro.search.distributed import ShardedSearchService
+
+    store = DocumentStore.from_texts(list(PAPER_EXAMPLE_DOCS))
+    svc = ShardedSearchService(store, n_shards=2, sw_count=10, fu_count=5,
+                               incremental=True)
+    svc.snapshot(tmp_path, keep=1)
+    want = _frags(svc.search("who are you", top_k=16))
+    # simulate two crashed snapshot runs: shards advance, manifest never does
+    svc.add_documents(["new doc one"])
+    svc.commit()
+    for _ in range(2):
+        for i, ix in enumerate(svc.indexers):
+            ix.snapshot(tmp_path / f"shard_{i:02d}", keep=0)
+    restored = ShardedSearchService.restore(tmp_path)  # the OLD pinned set
+    assert _frags(restored.search("who are you", top_k=16)) == want
+    # a completed snapshot re-pins and GCs down to keep=1 per shard
+    svc.snapshot(tmp_path, keep=1)
+    assert all(
+        len(list((tmp_path / f"shard_{i:02d}").glob("snap_*"))) == 1
+        for i in range(2)
+    )
+    restored = ShardedSearchService.restore(tmp_path)
+    assert _frags(restored.search("who are you", top_k=16)) == _frags(
+        svc.search("who are you", top_k=16)
+    )
+
+
+def test_frontend_warm_start_from_snapshot(tmp_path):
+    from repro.search.frontend import ServingFrontend
+
+    ix, store = _small_indexer(n_docs=12, batches=2)
+    cold = ServingFrontend(ix)
+    queries = ["who are you who", "to be or not to be"]
+    before = [cold.search(q, top_k=8) for q in queries]
+    ix.snapshot(tmp_path)
+    warm = ServingFrontend.from_snapshot(tmp_path)
+    after = [warm.search(q, top_k=8) for q in queries]
+    for b, a in zip(before, after):
+        assert _frags(b) == _frags(a)
+    # and a sharded snapshot is auto-detected via service.json
+    from repro.index import DocumentStore
+    from repro.search.distributed import ShardedSearchService
+
+    svc_store = DocumentStore.from_texts(list(PAPER_EXAMPLE_DOCS))
+    svc = ShardedSearchService(svc_store, n_shards=2, sw_count=10, fu_count=5,
+                               incremental=True)
+    svc.snapshot(tmp_path / "svc")
+    warm_svc = ServingFrontend.from_snapshot(tmp_path / "svc")
+    assert _frags(warm_svc.search("who are you", top_k=8)) == _frags(
+        ServingFrontend(svc).search("who are you", top_k=8)
+    )

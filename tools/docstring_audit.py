@@ -1,7 +1,9 @@
-"""Docstring audit for the public ``repro.search`` / ``repro.index`` APIs.
+"""Docstring audit for the public ``repro.search`` / ``repro.index`` /
+``repro.checkpoint`` APIs.
 
-The repo's documentation contract (ISSUE 3 satellite): every public class
-and module-level function of the search and index layers must state
+The repo's documentation contract (ISSUE 3 satellite; extended to the
+persistence layers by ISSUE 4): every public class and module-level
+function of the search, index and checkpoint layers must state
 
 * its **paper-§ anchor** — a ``§`` reference tying the code to the source
   paper or to a stable ``DESIGN.md`` section; and
@@ -26,7 +28,7 @@ import inspect
 import pkgutil
 import sys
 
-PACKAGES = ("repro.search", "repro.index")
+PACKAGES = ("repro.search", "repro.index", "repro.checkpoint")
 
 # module docstrings must state what the code is exact with respect to
 EXACTNESS_KEYWORDS = (
@@ -66,9 +68,10 @@ def audit(verbose: bool = False) -> list[str]:
     n_modules = n_symbols = 0
     for package in PACKAGES:
         for module in iter_modules(package):
-            is_init = module.__name__.rsplit(".", 1)[-1] in (
-                "search", "index",
-            )
+            # package __init__ modules re-export; audited where defined.
+            # (Compared by full name: repro.checkpoint.checkpoint must NOT
+            # be mistaken for the repro.checkpoint package itself.)
+            is_init = module.__name__ in PACKAGES
             doc = inspect.getdoc(module) or ""
             if not is_init:
                 n_modules += 1

@@ -1,0 +1,102 @@
+"""CI persistence smoke: snapshot in one process, restore in another,
+re-serve the golden §10.1–10.2 queries (DESIGN.md §12).
+
+Two subcommands, run as SEPARATE processes so the restore can share
+nothing with the build (the restart the durable store exists for):
+
+    PYTHONPATH=src python tools/persistence_smoke.py save <dir>
+    PYTHONPATH=src python tools/persistence_smoke.py check <dir>
+
+``save`` builds the paper's example corpus + a Zipf tail incrementally
+(commits across generations, one delete), snapshots a sharded service into
+``<dir>``, and records every golden query's exact fragment set in
+``<dir>/expected.json``.  ``check`` restores the service from disk in a
+fresh process, re-serves the same queries through the frontend AND the raw
+engines, and exits non-zero unless the fragment sets are identical — the
+§12 exactness contract, enforced end to end across a process boundary.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+# the golden §10.1–10.2 queries of tests/test_golden.py plus the §12
+# duplicate-lemma running example
+GOLDEN_QUERIES = ("who are you", "who are you who", "to be or not to be")
+
+
+def _fragments(resp) -> list:
+    return sorted((d.doc_id, f.start, f.end) for d in resp.docs for f in d.fragments)
+
+
+def _build_service():
+    from repro.index import DocumentStore, PAPER_EXAMPLE_DOCS
+    from repro.index.corpus import synthesize_corpus
+    from repro.search.distributed import ShardedSearchService
+
+    tail = synthesize_corpus(n_docs=40, doc_len=80, vocab_size=800, seed=29)
+    store = DocumentStore.from_texts(
+        list(PAPER_EXAMPLE_DOCS) + [d.text for d in tail.documents]
+    )
+    svc = ShardedSearchService(
+        store, n_shards=2, sw_count=60, fu_count=150, incremental=True
+    )
+    svc.add_documents(["who is who in the world of war, who are you"])
+    svc.commit()
+    svc.delete_document(3)
+    return svc
+
+
+def save(directory: Path) -> int:
+    from repro.search.frontend import ServingFrontend
+
+    svc = _build_service()
+    frontend = ServingFrontend(svc)
+    expected = {
+        q: _fragments(frontend.search(q, top_k=64)) for q in GOLDEN_QUERIES
+    }
+    svc.snapshot(directory)
+    (directory / "expected.json").write_text(json.dumps(expected, indent=1))
+    print(f"saved service snapshot + {len(expected)} golden fragment sets "
+          f"to {directory}")
+    return 0
+
+
+def check(directory: Path) -> int:
+    from repro.search.distributed import ShardedSearchService
+    from repro.search.frontend import ServingFrontend
+
+    expected = json.loads((directory / "expected.json").read_text())
+    frontend = ServingFrontend.from_snapshot(directory)
+    svc = ShardedSearchService.restore(directory)
+    failures = []
+    for q, want in expected.items():
+        want = [tuple(f) for f in want]
+        got_frontend = _fragments(frontend.search(q, top_k=64))
+        got_raw = _fragments(svc.search(q, top_k=64))
+        if got_frontend != want:
+            failures.append(f"frontend fragments diverged for {q!r}")
+        if got_raw != want:
+            failures.append(f"raw-engine fragments diverged for {q!r}")
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    if not failures:
+        print(f"restored service reproduced {len(expected)} golden fragment "
+              f"sets exactly (fresh process, mmap warm start)")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    if len(sys.argv) != 3 or sys.argv[1] not in ("save", "check"):
+        print(__doc__, file=sys.stderr)
+        return 2
+    directory = Path(sys.argv[2])
+    return save(directory) if sys.argv[1] == "save" else check(directory)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
