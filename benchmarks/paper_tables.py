@@ -256,6 +256,15 @@ def bench_serving(n_queries=8, subs_per_query=2, repeats=3):
         fused_results = sum(len(r) for r in res.per_query)
         fused_rounds.append(time.perf_counter() - t0)
     fused_us = 1e6 * min(fused_rounds) / n_queries
+    dispatches = fused.dispatch_count() / repeats
+
+    # phase attribution (DESIGN.md §13.5): one instrumented pass splits the
+    # batch into plan / pack / H2D / dispatch / readout µs
+    phases: dict = {}
+    prev = fused.collect_phases(phases)
+    eng.search_query_batch(batch)
+    fused.collect_phases(prev)
+    phases_us = {k: sum(v) for k, v in phases.items()}
 
     return {
         "n_queries": n_queries,
@@ -264,7 +273,8 @@ def bench_serving(n_queries=8, subs_per_query=2, repeats=3):
         "fused_batch": {
             "us_per_call": fused_us,
             "results": fused_results,
-            "device_dispatches_per_batch": fused.dispatch_count() / repeats,
+            "device_dispatches_per_batch": dispatches,
+            "phases_us_per_batch": phases_us,
         },
         "speedup": seed_us / max(fused_us, 1e-9),
     }
@@ -276,6 +286,120 @@ def bench_serving_results_match(serving: dict) -> bool:
         serving["per_subquery_seed"]["results"]
         == serving["fused_batch"]["results"]
     )
+
+
+# ---------------------------------------------------------------------------
+# device-resident posting arena vs the host-pack path (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def bench_arena(quick=False, n_queries=8, subs_per_query=2, repeats=5):
+    """Arena-resident serving vs the host-pack path on an FU/stop-heavy
+    batch (DESIGN.md §13.5) — the paper's expensive case: every query is
+    drawn over frequently-occurring words, so per-key posting lists are
+    large, occurrence ranks are deep (the host pack's ``[R, L, K]`` table is
+    at its worst) and per-batch host assembly dominates.
+
+    Both paths serve the IDENTICAL (query, subquery) batch through
+    ``serve_query_batch``; the arena path ships only descriptors against
+    posting columns uploaded once per index generation.  Reports
+    steady-state best-of-``repeats`` µs per served query for each path, the
+    per-phase attribution, the residency statistics, and the fragment-set
+    equality verdict (``results_match`` — a CI gate, with
+    ``device_dispatches_per_batch == 1`` for the resident path).
+    """
+    from repro.core.postings import QueryStats
+    from repro.search import fused
+    from repro.search.arena import PostingArena
+
+    n_docs, doc_len = (150, 220) if quick else (300, 300)
+    store = synthesize_corpus(n_docs=n_docs, doc_len=doc_len, vocab_size=3000,
+                              seed=13)
+    idx = build_indexes(store, sw_count=80, fu_count=300, max_distance=5)
+    subs = _stop_lemma_queries(
+        store, idx, n_queries=n_queries * subs_per_query, seed=5
+    )
+    work = [
+        [(s, idx) for s in subs[i * subs_per_query : (i + 1) * subs_per_query]]
+        for i in range(n_queries)
+    ]
+
+    arena = PostingArena(budget_bytes=1 << 30)
+    t0 = time.perf_counter()
+    res = arena.acquire(idx, 0)
+    upload_sec = time.perf_counter() - t0
+    residencies = {id(idx): res}
+
+    # warm both paths (fixed shape budgets -> steady-state latency)
+    fused.serve_query_batch(work, max_distance=idx.max_distance)
+    fused.serve_query_batch(
+        work, max_distance=idx.max_distance, residencies=residencies
+    )
+
+    out = {}
+    for name, kwargs in (("host_pack", {}), ("arena", {"residencies": residencies})):
+        rounds = []
+        result = None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            result = fused.serve_query_batch(
+                work, max_distance=idx.max_distance, **kwargs
+            )
+            rounds.append(time.perf_counter() - t0)
+        phases: dict = {}
+        prev = fused.collect_phases(phases)
+        fused.serve_query_batch(work, max_distance=idx.max_distance, **kwargs)
+        fused.collect_phases(prev)
+        out[name] = {
+            "us_per_query": 1e6 * min(rounds) / n_queries,
+            "results": sum(len(p) for p in result.per_query),
+            "fragments": [sorted((r.doc_id, r.start, r.end) for r in p)
+                          for p in result.per_query],
+            "phases_us_per_batch": {k: sum(v) for k, v in phases.items()},
+        }
+
+    stats = QueryStats()
+    fused.reset_dispatch_count()
+    fused.serve_query_batch(
+        work, max_distance=idx.max_distance, residencies=residencies,
+        stats=stats, batch_stats=stats,
+    )
+    dispatches = fused.dispatch_count()
+    match = out["host_pack"]["fragments"] == out["arena"]["fragments"]
+    for v in out.values():
+        v.pop("fragments")  # equality verdict recorded; keep the JSON small
+    m = arena.metrics()
+    key_lookups = stats.arena_hits + stats.arena_misses
+    # release the device buffers before returning: later bench sections
+    # (indexing/persistence) time memory-sensitive paths, and ~150 MB of
+    # lingering arena buffers measurably skews them in one-process runs
+    import gc
+
+    arena.release()
+    del res, residencies
+    gc.collect()
+    return {
+        "n_docs": n_docs,
+        "doc_len": doc_len,
+        "n_queries": n_queries,
+        "host_pack": out["host_pack"],
+        "arena_path": out["arena"],
+        "speedup": out["host_pack"]["us_per_query"]
+        / max(out["arena"]["us_per_query"], 1e-9),
+        "results_match": bool(match),
+        "device_dispatches_per_batch": dispatches,
+        "arena": {
+            "upload_sec": upload_sec,
+            "resident_bytes": m["arena_bytes"],
+            "resident_families": m["arena_entries"],
+            # per-batch key residency: keys served from device extents over
+            # all key lookups (misses = host-pack fallbacks)
+            "hit_rate": stats.arena_hits / key_lookups if key_lookups else 0.0,
+            "key_hits": stats.arena_hits,
+            "key_misses": stats.arena_misses,
+            "h2d_bytes_per_batch": stats.h2d_bytes,
+        },
+    }
 
 
 # ---------------------------------------------------------------------------

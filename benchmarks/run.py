@@ -19,6 +19,7 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 
 from benchmarks.paper_tables import (  # noqa: E402
     bench_algorithms,
+    bench_arena,
     bench_duplicates,
     bench_frontend,
     bench_indexing,
@@ -65,6 +66,13 @@ def main() -> None:
         print(f"engine_{r['engine']},{r['avg_ms']*1000:.1f},results={r['results']}")
 
     # ---- fused batched serving vs seed per-subquery path --------------------
+    committed = Path(__file__).parent.parent / "BENCH_serving.json"
+    committed_speedup = None
+    if committed.exists():
+        try:
+            committed_speedup = json.loads(committed.read_text())["speedup"]
+        except (json.JSONDecodeError, KeyError):
+            pass
     serving = bench_serving(repeats=2 if args.quick else 5)
     for path in ("per_subquery_seed", "fused_batch"):
         print(f"serving_{path},{serving[path]['us_per_call']:.1f},"
@@ -72,11 +80,47 @@ def main() -> None:
     print(f"serving_speedup,{serving['speedup']:.2f},"
           f"dispatches_per_batch="
           f"{serving['fused_batch']['device_dispatches_per_batch']:.0f}")
+    for phase, us in serving["fused_batch"]["phases_us_per_batch"].items():
+        print(f"serving_phase_{phase.removesuffix('_us')},{us:.0f},per_batch")
     if not bench_serving_results_match(serving):
         print("serving_results_MISMATCH,0,"
               f"seed={serving['per_subquery_seed']['results']};"
               f"fused={serving['fused_batch']['results']}")
         sys.exit(1)
+    # CI gate (benchmarks/README.md): the fused path's µs/query advantage
+    # over the seed path — a SAME-RUN ratio, so machine speed cancels —
+    # must stay within 2x of the committed BENCH_serving.json speedup
+    if (
+        committed_speedup is not None
+        and serving["speedup"] < 0.5 * committed_speedup
+    ):
+        print(f"serving_fused_REGRESSION,{serving['speedup']:.2f},"
+              f"committed_speedup={committed_speedup:.2f};gate=0.5x")
+        sys.exit(1)
+
+    # ---- device-resident posting arena vs host-pack path (DESIGN.md §13) ---
+    arena = bench_arena(quick=args.quick, repeats=3 if args.quick else 5)
+    for path in ("host_pack", "arena_path"):
+        print(f"arena_{path},{arena[path]['us_per_query']:.1f},"
+              f"results={arena[path]['results']}")
+    print(f"arena_speedup,{arena['speedup']:.2f},"
+          f"dispatches_per_batch={arena['device_dispatches_per_batch']};"
+          f"hit_rate={arena['arena']['hit_rate']:.2f};"
+          f"resident_mb={arena['arena']['resident_bytes'] / (1 << 20):.1f};"
+          f"h2d_per_batch={arena['arena']['h2d_bytes_per_batch']};"
+          f"upload_ms={arena['arena']['upload_sec'] * 1e3:.0f}")
+    for phase, us in arena["arena_path"]["phases_us_per_batch"].items():
+        print(f"arena_phase_{phase.removesuffix('_us')},{us:.0f},per_batch")
+    # CI gates (benchmarks/README.md): the arena must be invisible in
+    # results and keep one-dispatch-per-batch serving
+    if not arena["results_match"]:
+        print("arena_results_MISMATCH,0,arena != host-pack fragments")
+        sys.exit(1)
+    if arena["device_dispatches_per_batch"] != 1:
+        print(f"arena_dispatch_GATE,0,"
+              f"dispatches={arena['device_dispatches_per_batch']}")
+        sys.exit(1)
+    serving["arena"] = arena
 
     # ---- planner + deadline-aware frontend (cache hit rate, tail latency) ---
     frontend = bench_frontend(

@@ -61,6 +61,10 @@ class QueryStats:
     skipped_subqueries: int = 0  # deadline admission dropped (partial result)
     partial: bool = False  # deadline early-exit happened
     deadline_sec: float = 0.0  # the request's admission budget (0 = none)
+    # ---- posting-arena counters (PR 5, DESIGN.md §13) ---------------------
+    arena_hits: int = 0  # keys served from device-resident extents
+    arena_misses: int = 0  # keys that fell back to the host-pack path
+    h2d_bytes: int = 0  # bytes actually shipped host->device this query/batch
 
     def merge(self, other: "QueryStats") -> None:
         self.postings_read += other.postings_read
@@ -78,6 +82,9 @@ class QueryStats:
         self.skipped_subqueries += other.skipped_subqueries
         self.partial = self.partial or other.partial
         self.deadline_sec = max(self.deadline_sec, other.deadline_sec)
+        self.arena_hits += other.arena_hits
+        self.arena_misses += other.arena_misses
+        self.h2d_bytes += other.h2d_bytes
 
 
 class KeyIterator:

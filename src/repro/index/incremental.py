@@ -476,6 +476,35 @@ class IncrementalIndexer:
         # bumped past the snapshot's stored epoch on every restore so tokens
         # from different boots of the same snapshot lineage never collide
         self._restore_epoch = 0
+        # mutation listeners (DESIGN.md §13.2): called after every token
+        # bump, so generation-keyed device caches (the posting arena) can
+        # evict stale buffers eagerly instead of waiting for LRU pressure
+        self._listeners: list = []
+
+    def subscribe(self, callback):
+        """Register ``callback(indexer)`` to run after every query-visible
+        mutation (commit, committed delete, compact) — i.e. after every
+        ``generation_token`` bump.  The serving-side consumer is
+        ``PostingArena.attach`` (DESIGN.md §13.2), which evicts
+        device-resident posting buffers keyed by tokens this indexer no
+        longer serves.  Returns an unsubscribe callable (idempotent) —
+        short-lived consumers over a long-lived indexer must call it (see
+        ``PostingArena.detach``) or their closures outlive them.  Listeners
+        are droppable accelerator state, so they are intentionally NOT part
+        of snapshots (a restored indexer starts with none)."""
+        self._listeners.append(callback)
+
+        def unsubscribe() -> None:
+            try:
+                self._listeners.remove(callback)
+            except ValueError:
+                pass
+
+        return unsubscribe
+
+    def _notify(self) -> None:
+        for cb in list(self._listeners):
+            cb(self)
 
     @property
     def generation_token(self):
@@ -602,6 +631,7 @@ class IncrementalIndexer:
             self.tombstones.add(doc_id)
             self._view = None  # tombstone filter must take effect
             self._mutations += 1  # query-visible: invalidate frontend caches
+            self._notify()
         else:
             raise KeyError(doc_id)
         self._doc_lemmas.pop(doc_id, None)
@@ -658,6 +688,7 @@ class IncrementalIndexer:
         self.generation += 1
         self._view = None
         self._mutations += 1
+        self._notify()
         return {
             "new_docs": len(new_docs),
             "rekeyed_docs": len(rekeyed),
@@ -795,6 +826,7 @@ class IncrementalIndexer:
         self.segments = new_segments
         self._view = None
         self._mutations += 1
+        self._notify()
         return {"segments": len(self.segments), "collected": collected}
 
     # -- the live view ------------------------------------------------------

@@ -68,6 +68,7 @@ __all__ = [
     "FORMAT_VERSION",
     "StoreError",
     "StoredIndexSet",
+    "family_rows",
     "fl_signature",
     "latest_snapshot",
     "load_snapshot",
@@ -420,6 +421,25 @@ class StoredIndexSet(IndexSet):
 # ---------------------------------------------------------------------------
 
 
+def family_rows(
+    mapping, width: int
+) -> tuple[list, list[np.ndarray], np.ndarray, np.ndarray]:
+    """One family's concatenated-rows bookkeeping (DESIGN.md §12.1/§13.1):
+    sorted keys, their int32 row arrays, per-key row counts and cumulative
+    start offsets.  This is the SINGLE definition of the concatenated
+    columnar key layout — the on-disk codec (``write_segment_store``) and
+    the device-resident posting arena (``search/arena.py``) both build their
+    extents from it, so a key's rows land in the same order on disk and on
+    device."""
+    keys = sorted(mapping.keys())
+    arrays = [np.asarray(mapping[k], dtype=np.int32) for k in keys]
+    rows = np.asarray([len(a) for a in arrays], dtype=np.int64)
+    starts = np.zeros(len(rows), dtype=np.int64)
+    if len(rows):
+        np.cumsum(rows[:-1], out=starts[1:])
+    return keys, arrays, rows, starts
+
+
 def _key_to_table(key) -> str:
     return key if isinstance(key, str) else _KEY_SEP.join(key)
 
@@ -449,13 +469,7 @@ def write_segment_store(
     key_table: dict[str, np.ndarray] = {}
     for fname in _FAMILIES:
         width = FAMILY_WIDTH[fname]
-        mapping = getattr(index, fname)
-        keys = sorted(mapping.keys())
-        arrays = [np.asarray(mapping[k], dtype=np.int32) for k in keys]
-        rows = np.asarray([len(a) for a in arrays], dtype=np.int64)
-        starts = np.zeros(len(rows), dtype=np.int64)
-        if len(rows):
-            np.cumsum(rows[:-1], out=starts[1:])
+        keys, arrays, rows, starts = family_rows(getattr(index, fname), width)
         col_blobs, codes, sizes = _encode_family(arrays, starts, width)
         offsets = []
         for raw in col_blobs:

@@ -81,6 +81,12 @@ def main() -> None:
     ap.add_argument("--snapshot-dir", default=None,
                     help="warm start from (or bootstrap) a durable index "
                          "snapshot directory (DESIGN.md §12)")
+    ap.add_argument("--arena-budget-mb", type=float, default=64.0,
+                    help="device-resident posting arena byte budget "
+                         "(DESIGN.md §13; 0 disables — frontend mode only): "
+                         "hot posting columns upload once per index "
+                         "generation and serving batches gather/pack on "
+                         "device instead of in host numpy")
     args = ap.parse_args()
 
     import time
@@ -153,7 +159,17 @@ def main() -> None:
     from ..search.frontend import SearchRequest, ServingFrontend
 
     deadline = args.deadline_ms / 1000.0 if args.deadline_ms is not None else None
-    frontend = ServingFrontend(svc, default_deadline_sec=deadline)
+    frontend = ServingFrontend(
+        svc,
+        default_deadline_sec=deadline,
+        arena_budget_mb=args.arena_budget_mb,
+    )
+    # warm through the REAL serving path with the actual query slate and
+    # top_k: shape budgets and top_k are static device-program arguments,
+    # so this compiles exactly the programs the first served round reuses
+    warm = frontend.warmup(queries=args.queries, top_k=args.top_k)
+    print(f"warmup: precompiled {warm['programs']} device program(s) in "
+          f"{warm['seconds'] * 1000:.0f} ms (cold p99 excludes jit compile)")
     if args.explain:
         for q in args.queries:
             print(frontend.planner.plan(q).explain())
@@ -170,6 +186,15 @@ def main() -> None:
         f"{m['posting_cache_bytes'] / 1024:.0f} KB), "
         f"{m['partial_responses']} partial responses"
     )
+    if "arena_bytes" in m:
+        print(
+            f"arena: {m['arena_entries']} resident families, "
+            f"{m['arena_bytes'] / (1 << 20):.1f} MB, "
+            f"hit rate {m['arena_hit_rate']:.2f} "
+            f"({m['arena_uploads']} uploads, "
+            f"{m['arena_upload_bytes'] / (1 << 20):.1f} MB shipped once per "
+            f"generation)"
+        )
 
 
 if __name__ == "__main__":

@@ -37,7 +37,7 @@ from ..core.postings import QueryStats, SearchResult
 from ..index.builder import IndexSet, build_indexes
 from ..index.corpus import DocumentStore
 from ..search.engine import ALGORITHMS, QueryResponse, RankedDoc
-from ..search.fused import empty_batch_result, plan_query_batch, run_query_batch
+from ..search.fused import serve_query_batch
 from ..search.relevance import rank_documents
 
 __all__ = ["ShardedSearchService", "shard_documents", "device_topk_merge"]
@@ -88,12 +88,17 @@ class ShardedSearchService:
         use_kernel: bool = False,
         doc_len: int = 512,
         incremental: bool = False,
+        arena=None,
     ):
         from ..core.lemma import FLList
 
         self.algorithm = algorithm
         self.use_kernel = use_kernel
         self.doc_len = doc_len
+        # optional device-resident posting arena (DESIGN.md §13); per-shard
+        # residencies are acquired under each shard's generation token.
+        # Runtime accelerator state: never part of snapshots.
+        self.arena = arena
         self.max_distance = max_distance
         self.n_shards = n_shards
         self.sw_count = sw_count
@@ -283,6 +288,7 @@ class ShardedSearchService:
 
         svc = cls.__new__(cls)
         svc.algorithm = m["algorithm"]
+        svc.arena = None  # runtime accelerator state, not snapshotted
         svc.use_kernel = m["use_kernel"]
         svc.doc_len = m["doc_len"]
         svc.max_distance = m["max_distance"]
@@ -396,20 +402,39 @@ class ShardedSearchService:
             for subs in per_query_subs
         ]
         per_stats = [QueryStats() for _ in queries]
-        plan = plan_query_batch(work, doc_len=self.doc_len, stats=per_stats)
-        if plan is None:
-            result = empty_batch_result(len(queries), top_k)
-        else:
-            batch_stats = QueryStats()
-            result = run_query_batch(
-                plan,
-                max_distance=self.max_distance,
-                top_k=top_k,
-                use_kernel=self.use_kernel,
-                stats=batch_stats,
-            )
-            for st in per_stats:
-                st.device_dispatches = batch_stats.device_dispatches
+        residencies = None
+        if self.arena is not None:
+            live_ids = {id(v) for v in live}
+            specs = [
+                (
+                    idx,
+                    self.indexers[shard_id].generation_token
+                    if self.indexers is not None
+                    else "static",
+                    shard_id,
+                )
+                for shard_id, idx in enumerate(self.shards)
+                if id(idx) in live_ids
+            ]
+            residencies = {
+                id(spec[0]): res
+                for spec, res in zip(specs, self.arena.acquire_many(specs))
+            }
+        batch_stats = QueryStats()
+        result = serve_query_batch(
+            work,
+            max_distance=self.max_distance,
+            top_k=top_k,
+            doc_len=self.doc_len,
+            use_kernel=self.use_kernel,
+            stats=per_stats,
+            batch_stats=batch_stats,
+            residencies=residencies,
+        )
+        for st in per_stats:
+            # batch-level: one shared dispatch/transfer, assigned per query
+            st.device_dispatches = batch_stats.device_dispatches
+            st.h2d_bytes = batch_stats.h2d_bytes
         elapsed = time.perf_counter() - t0
         responses = []
         for qi, query in enumerate(queries):

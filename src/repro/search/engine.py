@@ -79,6 +79,7 @@ class SearchEngine:
         algorithm: Algorithm = "se2.4",
         use_kernel: bool = False,
         doc_len: int = 512,
+        arena=None,
     ):
         if algorithm != "fused" and algorithm not in ALGORITHMS:
             raise KeyError(algorithm)
@@ -90,6 +91,9 @@ class SearchEngine:
         self.algorithm = algorithm
         self.use_kernel = use_kernel
         self.doc_len = doc_len
+        # optional device-resident posting arena (DESIGN.md §13), used by
+        # the fused/planned paths; host algorithms never touch it
+        self.arena = arena
         self._vec = None
 
     @property
@@ -103,7 +107,10 @@ class SearchEngine:
             from .vectorized import VectorizedEngine
 
             self._vec = VectorizedEngine(
-                self._index_source, use_kernel=self.use_kernel, doc_len=self.doc_len
+                self._index_source,
+                use_kernel=self.use_kernel,
+                doc_len=self.doc_len,
+                arena=self.arena,
             )
         return self._vec
 
@@ -131,13 +138,21 @@ class SearchEngine:
         pins this against the §10 oracle)."""
         from .planner import execute_plans
 
+        view = self.index
+        residencies = None
+        if self.arena is not None:
+            from ..index.incremental import generation_token
+
+            res = self.arena.acquire(view, generation_token(self._index_source))
+            residencies = {id(view): res}
         return execute_plans(
             [plan],
-            [self.index],
-            max_distance=self.index.max_distance,
+            [view],
+            max_distance=view.max_distance,
             top_k=top_k,
             doc_len=self.doc_len,
             use_kernel=self.use_kernel,
+            residencies=residencies,
         )[0]
 
     def search_batch(

@@ -15,6 +15,11 @@ the three things heavy traffic needs (ROADMAP north star):
   reads ARE the prefetch).  A ``commit``/``compact``/``delete`` bumps the
   token, so stale entries become unreachable without any explicit flush —
   cache-invalidation-after-compact is pinned by ``tests/test_planner.py``.
+* **Arena residency** (DESIGN.md §13, opt-in via ``arena_budget_mb``) — hot
+  posting columns upload to the device once per generation token and
+  batches then gather/pack on device from descriptors; ``warmup()``
+  precompiles the bucketed device programs so cold p99 excludes jit
+  compile.  Fragments are identical with the arena on or off.
 * **Deadlines** — per-request response-time budgets enforced at *admission*
   (the 2009.03679 approach: bound the work before dispatch, don't abort
   mid-kernel).  Estimated cost is the plan's exact posting counts divided by
@@ -171,6 +176,8 @@ class ServingFrontend:
         use_kernel: bool = False,
         doc_len: int = 512,
         compute_dtype: str = "uint8",
+        arena_budget_mb: float = 0.0,
+        arena=None,
     ):
         self._source = source
         self.max_batch = max(1, int(max_batch))
@@ -180,6 +187,22 @@ class ServingFrontend:
         self.use_kernel = use_kernel
         self.doc_len = doc_len
         self.compute_dtype = compute_dtype
+        # device-resident posting arena (DESIGN.md §13): opt-in via a byte
+        # budget (or an externally shared PostingArena).  Resident keys
+        # gather/pack on device; non-resident keys keep the host path, so
+        # enabling the arena never changes fragments, only locality.  Only
+        # an arena this frontend CREATED is attached to the source's
+        # mutation hook (and detached by ``close()``); a shared arena's
+        # attach/detach lifecycle belongs to its owner — attaching here too
+        # would duplicate listeners.
+        self._owns_arena = False
+        if arena is None and arena_budget_mb and arena_budget_mb > 0:
+            from .arena import PostingArena
+
+            arena = PostingArena(budget_bytes=int(arena_budget_mb * (1 << 20)))
+            arena.attach(source)
+            self._owns_arena = True
+        self.arena = arena
         self.planner = QueryPlanner(source, lemmatizer=lemmatizer)
         self.posting_cache = PostingCache(capacity_bytes=posting_cache_bytes)
         self._result_cache: OrderedDict[tuple, object] = OrderedDict()
@@ -199,6 +222,7 @@ class ServingFrontend:
         use_mmap: bool = True,
         verify: bool = True,
         lemmatizer: Lemmatizer | None = None,
+        warmup_shapes: Sequence[tuple] | None = None,
         **kwargs,
     ) -> "ServingFrontend":
         """Warm-start a frontend from a §12.2 snapshot directory: a sharded
@@ -230,7 +254,12 @@ class ServingFrontend:
             source = IncrementalIndexer.restore(
                 directory, use_mmap=use_mmap, verify=verify, lemmatizer=lemmatizer
             )
-        return cls(source, lemmatizer=lemmatizer, **kwargs)
+        frontend = cls(source, lemmatizer=lemmatizer, **kwargs)
+        if warmup_shapes is not None:
+            # precompile the bucketed device programs at warm-start so the
+            # first served requests pay no jit compile (DESIGN.md §13.5)
+            frontend.warmup(shapes=warmup_shapes)
+        return frontend
 
     # ---- public serving API ----------------------------------------------
 
@@ -302,6 +331,14 @@ class ServingFrontend:
             # stash plan-time accounting to merge into the response stats
             plan._posting_cache_hits = p_hits  # type: ignore[attr-defined]
 
+        # arena residencies are acquired only when something will actually
+        # execute: a fully cache-served slate must never pay acquire work
+        # (a cold acquire re-uploads whole families)
+        residencies = (
+            self._acquire_residencies(views, cached_views, token)
+            if miss_idx
+            else None
+        )
         # micro-batch the misses: one fused dispatch per admitted batch.
         # Ranking runs at the chunk-wide max top_k; each response is trimmed
         # to its own request's top_k afterwards — rank_documents is a total
@@ -322,6 +359,7 @@ class ServingFrontend:
                 use_kernel=self.use_kernel,
                 compute_dtype=self.compute_dtype,
                 admitted=chunk_admitted,
+                residencies=residencies,
             )
             elapsed = time.perf_counter() - t0
             self._calibrate(chunk_admitted, elapsed)
@@ -349,7 +387,121 @@ class ServingFrontend:
             responses[dup] = self._from_cache(responses[first])
         return responses
 
+    def close(self) -> None:
+        """Release this frontend's hold on long-lived state (DESIGN.md
+        §13.2): if the frontend created its own posting arena, detach its
+        mutation listeners from the index source and drop the device
+        buffers.  Idempotent; a frontend over a long-lived indexer that is
+        discarded without ``close()`` leaves its listener (and arena
+        buffers) alive for the indexer's lifetime.  Shared arenas
+        (``arena=`` passed in) are untouched — their owner closes them."""
+        if self._owns_arena and self.arena is not None:
+            self.arena.detach()
+            self.arena.release()
+
     # ---- internals --------------------------------------------------------
+
+    def _acquire_residencies(self, views, cached_views, token):
+        """Posting-arena residencies per live shard view (DESIGN.md §13).
+
+        Keyed by ``id(cached_view)`` because that is the view object
+        ``execute_plans`` packs into work items; uploads read the RAW view
+        (the arena walks family dicts, which the cache wrapper does not
+        carry).  A sharded source's tuple token splits into per-shard
+        tokens, so one shard's commit only invalidates its own buffers.
+        """
+        if self.arena is None:
+            return None
+        per_shard = (
+            token
+            if isinstance(token, tuple) and len(token) == len(views)
+            else [token] * len(views)
+        )
+        all_res = self.arena.acquire_many(
+            [(raw, per_shard[i], i) for i, raw in enumerate(views)]
+        )
+        return {id(cached): res for cached, res in zip(cached_views, all_res)}
+
+    def warmup(
+        self,
+        shapes: Sequence[tuple] | None = None,
+        queries: Sequence[str] | None = None,
+        top_k: int = 10,
+    ) -> dict:
+        """Precompile the bucketed device programs so cold-start p99 no
+        longer includes jit compile (DESIGN.md §13.5).
+
+        ``queries`` — the reliable form — plans and executes representative
+        queries through the REAL serving path (arena gather kernels
+        included, result cache untouched), compiling exactly the buckets a
+        matching real slate hits; pass the ``top_k`` real requests will use
+        (it is a STATIC device-program argument, like every shape budget).
+        ``shapes`` lists explicit host-program buckets ``(events, rows,
+        lemmas, table_depth, queries, window)`` for operators replaying
+        observed budgets — note the window is the pow2 position budget of
+        the traffic, not ``doc_len``.  With neither argument, one default
+        bucket at the frontend's ``max_batch``/``doc_len`` is compiled (a
+        guess: real traffic buckets are data-dependent, so prefer
+        ``queries``).  Returns ``{"seconds", "programs"}``;
+        ``launch/serve.py`` reports the time.
+        """
+        import numpy as np_
+
+        import jax as jax_
+        import jax.numpy as jnp_
+
+        from .fused import bucket_pow2, fused_serve_batch
+
+        t0 = time.perf_counter()
+        programs = 0
+        if shapes is None and queries is None:
+            shapes = [
+                (4096, 512, 4, 64, bucket_pow2(self.max_batch),
+                 bucket_pow2(self.doc_len, lo=64))
+            ]
+        for e, r, l, k, q, n in shapes or ():
+            out = fused_serve_batch(
+                jnp_.asarray(np_.full((e, 3), -1, np_.int32)),
+                jnp_.asarray(np_.zeros((e,), np_.int8)),
+                jnp_.asarray(np_.full((r, l, k), n, np_.int32)),
+                jnp_.asarray(np_.full((r,), -1, np_.int32)),
+                jnp_.asarray(np_.full((r,), -1, np_.int32)),
+                jnp_.asarray(np_.zeros((r, l), np_.int32)),
+                max_distance=resolve_index_views(self._source)[2],
+                query_budget=q,
+                window_len=n,
+                top_k=top_k,
+                compute_dtype=self.compute_dtype,
+                use_kernel=self.use_kernel,
+                interpret=True,
+            )
+            jax_.block_until_ready(out)
+            programs += 1
+        if queries:
+            token = generation_token(self._source)
+            views, _, max_distance, _ = resolve_index_views(self._source)
+            cached_views = [
+                _CachedView(v, self.posting_cache, (token, i))
+                for i, v in enumerate(views)
+            ]
+            residencies = self._acquire_residencies(views, cached_views, token)
+            plans = [
+                self.planner.plan(q, views=cached_views, generation=token)
+                for q in queries
+            ]
+            for lo in range(0, len(plans), self.max_batch):
+                execute_plans(
+                    plans[lo : lo + self.max_batch],
+                    cached_views,
+                    max_distance=max_distance,
+                    top_k=top_k,
+                    doc_len=self.doc_len,
+                    use_kernel=self.use_kernel,
+                    compute_dtype=self.compute_dtype,
+                    residencies=residencies,
+                )
+                programs += 1
+        return {"seconds": time.perf_counter() - t0, "programs": programs}
 
     def _from_cache(self, resp):
         """A cache-hit response: shared docs, fresh hit-marked stats."""
@@ -409,7 +561,9 @@ class ServingFrontend:
         """Serving counters for dashboards and the bench harness."""
         n_lookups = self._result_hits + self._result_misses
         p_lookups = self.posting_cache.hits + self.posting_cache.misses
+        arena = self.arena.metrics() if self.arena is not None else {}
         return {
+            **arena,
             "served": self._served,
             "result_cache_hits": self._result_hits,
             "result_cache_misses": self._result_misses,

@@ -30,11 +30,18 @@ Combiner's Step-1 document alignment as a *pre-filter* over sorted doc-id
 lists (``kernels/intersect.py``), and Step 2's counting gate drops candidate
 documents that cannot meet any lemma's multiplicity — only surviving
 documents enter the row budget.
+
+``serve_query_batch`` is the routing entry over this host-pack path and the
+DESIGN.md §13 device-resident posting arena (``search/arena.py``): work
+items whose keys are resident ship only descriptors and gather/pack on
+device; the rest run through ``plan_query_batch`` exactly as before.
+Fragment sets are identical for every routing.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -45,7 +52,7 @@ import jax.numpy as jnp
 
 from ..core.keys import SelectedKey, Subquery, select_keys
 from ..core.postings import QueryStats, SearchResult
-from ..index.builder import IndexSet
+from ..index.builder import IndexSet, POSTING_WIDTH
 from ..kernels.intersect import PAD, block_offsets, intersect_sorted
 from ..kernels.proximity import proximity_window
 
@@ -59,8 +66,11 @@ __all__ = [
     "plan_query_batch",
     "fused_serve_batch",
     "run_query_batch",
+    "serve_query_batch",
     "dispatch_count",
     "reset_dispatch_count",
+    "collect_phases",
+    "compile_count",
 ]
 
 # Default list size above which the Step-1 pre-filter pays for a device
@@ -81,6 +91,51 @@ def reset_dispatch_count() -> None:
     """Zero the DESIGN.md §9 dispatch counter (see ``dispatch_count``)."""
     global _DISPATCHES
     _DISPATCHES = 0
+
+
+# ---------------------------------------------------------------------------
+# phase attribution + compile accounting (DESIGN.md §13.5 benches)
+# ---------------------------------------------------------------------------
+
+# When a sink dict is installed, the serving paths attribute wall time to
+# the five phases of a batch (plan / pack / h2d / dispatch / readout µs,
+# appended per batch) — BLOCKING between phases for accuracy, so the sink is
+# bench-only; production serving (sink=None) keeps the async overlap.
+_PHASE_SINK: dict | None = None
+
+
+def collect_phases(sink: dict | None) -> dict | None:
+    """Install (or clear, with ``None``) the phase-breakdown sink used by
+    ``benchmarks/run.py`` to attribute batch latency (plan / pack / H2D /
+    dispatch / readout — the DESIGN.md §13.5 attribution).  Returns the
+    previous sink."""
+    global _PHASE_SINK
+    prev, _PHASE_SINK = _PHASE_SINK, sink
+    return prev
+
+
+def _phase(sink: dict | None, name: str, t0: float) -> float:
+    now = time.perf_counter()
+    if sink is not None:
+        sink.setdefault(name, []).append((now - t0) * 1e6)
+    return now
+
+
+def compile_count() -> int | None:
+    """Compiled-program count across the serving device entry points
+    (``fused_serve_batch`` + ``arena_serve_batch``), or ``None`` when the
+    jax version exposes no jit-cache introspection.  The recompile-churn
+    regression test pins that identically-bucketed batches reuse ONE
+    compiled program (DESIGN.md §9.2/§13.4)."""
+    from .arena import arena_serve_batch
+
+    total = 0
+    for fn in (fused_serve_batch, arena_serve_batch):
+        cache_size = getattr(fn, "_cache_size", None)
+        if cache_size is None:
+            return None
+        total += cache_size()
+    return total
 
 
 def bucket_pow2(n: int, lo: int = 1) -> int:
@@ -361,6 +416,8 @@ def plan_query_batch(
             return stats
         return stats[qi]
 
+    sink = _PHASE_SINK
+    t0 = time.perf_counter()
     segs: list[tuple[int, SegmentEvents]] = []
     for qi, items in enumerate(work):
         for item in items:
@@ -376,6 +433,7 @@ def plan_query_batch(
             )
             if se is not None:
                 segs.append((qi, se))
+    t0 = _phase(sink, "plan_us", t0)
     if not segs:
         return None
 
@@ -411,6 +469,7 @@ def plan_query_batch(
         mult[row : row + nd, : len(se.mult)] = se.mult
         row += nd
         ev += ne
+    _phase(sink, "pack_us", t0)
     return QueryBatchPlan(
         events=events,
         primary=primary,
@@ -601,13 +660,26 @@ def run_query_batch(
     single ``np.nonzero`` over the whole event batch (DESIGN.md §9.3; the
     fragment sets are exact §10.2 results, identical to the scalar Combiner)."""
     global _DISPATCHES
-    out = fused_serve_batch(
+    sink = _PHASE_SINK
+    t0 = time.perf_counter()
+    inputs = (
         jnp.asarray(plan.events),
         jnp.asarray(plan.primary),
         jnp.asarray(plan.postab),
         jnp.asarray(plan.row_doc),
         jnp.asarray(plan.row_query),
         jnp.asarray(plan.mult),
+    )
+    if stats is not None:
+        stats.h2d_bytes += (
+            plan.events.nbytes + plan.primary.nbytes + plan.postab.nbytes
+            + plan.row_doc.nbytes + plan.row_query.nbytes + plan.mult.nbytes
+        )
+    if sink is not None:
+        jax.block_until_ready(inputs)
+        t0 = _phase(sink, "h2d_us", t0)
+    out = fused_serve_batch(
+        *inputs,
         max_distance=max_distance,
         query_budget=plan.query_budget,
         window_len=plan.doc_len,
@@ -619,6 +691,9 @@ def run_query_batch(
     _DISPATCHES += 1
     if stats is not None:
         stats.device_dispatches += 1
+    if sink is not None:
+        jax.block_until_ready(out)
+        t0 = _phase(sink, "dispatch_us", t0)
 
     # vectorized readout: one nonzero over the event batch (primary events
     # carry one fragment per emitting position), then one np.unique for the
@@ -644,9 +719,203 @@ def run_query_batch(
         u_q.tolist(), u_doc.tolist(), u_start.tolist(), u_end.tolist()
     ):
         per_query[qi].append(SearchResult(doc_id=d, start=st, end=en))
-    return FusedBatchResult(
+    result = FusedBatchResult(
         per_query=per_query,
         top_docs=np.asarray(out["top_docs"])[:nq],
         top_scores=np.asarray(out["top_scores"])[:nq],
         n_fragments=np.asarray(out["n_fragments"])[:nq],
     )
+    _phase(sink, "readout_us", t0)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# arena/host orchestration (DESIGN.md §13: resident descriptors, host fallback)
+# ---------------------------------------------------------------------------
+
+
+def _merge_results(
+    results: Sequence[FusedBatchResult], n_queries: int, top_k: int
+) -> FusedBatchResult:
+    """Union per-query fragment sets (set dedup, as the single-program
+    readout's ``np.unique`` does) and re-merge the row-level top-k lists of
+    a split arena + host execution."""
+    if len(results) == 1:
+        return results[0]
+    per_query: list[list[SearchResult]] = []
+    for qi in range(n_queries):
+        union: set[SearchResult] = set()
+        for r in results:
+            union.update(r.per_query[qi])
+        per_query.append(sorted(union))
+    scores = np.concatenate([r.top_scores for r in results], axis=1)
+    docs = np.concatenate([r.top_docs for r in results], axis=1)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :top_k]
+    return FusedBatchResult(
+        per_query=per_query,
+        top_docs=np.take_along_axis(docs, order, axis=1),
+        top_scores=np.take_along_axis(scores, order, axis=1),
+        n_fragments=sum(r.n_fragments for r in results),
+    )
+
+
+def serve_query_batch(
+    work: Sequence[Sequence[tuple]],
+    *,
+    max_distance: int,
+    top_k: int = 16,
+    doc_len: int = 512,
+    use_kernel: bool = False,
+    compute_dtype: str = "uint8",
+    interpret: bool = True,
+    stats: QueryStats | Sequence[QueryStats] | None = None,
+    batch_stats: QueryStats | None = None,
+    residencies: dict | None = None,
+    intersect_device_threshold: int = INTERSECT_DEVICE_THRESHOLD,
+) -> FusedBatchResult:
+    """Serve one query batch, routing each (subquery, shard) work item over
+    the device-resident posting arena when its keys are resident and through
+    the host-pack path otherwise (DESIGN.md §13).
+
+    ``work`` is the ``plan_query_batch`` cross product (items are
+    ``(subquery, index[, keys])``); ``residencies`` maps ``id(view)`` to the
+    :class:`~repro.search.arena.ArenaResidency` acquired for that view (no
+    entry = host path for that view's items).  A fully resident batch is ONE
+    arena dispatch; a fully host batch is ONE host dispatch; a mixed batch
+    runs both and merges — never more than two device programs.
+
+    Exactness contract: the returned per-query fragment sets are identical
+    for every routing (arena, host, or mixed) and equal to the §10 oracle —
+    the arena program reproduces the host pack's dedup, Step-1/Step-2 gates
+    and rank cover bit-for-bit (``tests/test_arena.py``,
+    ``tests/test_differential.py``).
+    """
+    from .arena import ArenaOverflow, plan_arena_batch, run_arena_batch
+
+    global _DISPATCHES
+
+    def stat_for(qi: int) -> QueryStats | None:
+        if stats is None or isinstance(stats, QueryStats):
+            return stats
+        return stats[qi]
+
+    sink = _PHASE_SINK
+    host_work: list[list[tuple]] = [[] for _ in work]
+    arena_items: list[tuple] = []
+    arena_fallback: list[tuple[int, tuple]] = []
+    t0 = time.perf_counter()
+    for qi, items in enumerate(work):
+        for item in items:
+            sub, view = item[0], item[1]
+            res = residencies.get(id(view)) if residencies else None
+            if res is None:
+                host_work[qi].append(item)
+                continue
+            keys = (
+                list(item[2])
+                if len(item) > 2 and item[2] is not None
+                else select_keys(sub, view.fl)
+            )
+            st = stat_for(qi)
+            extents = []
+            for key in keys:
+                ext = res.lookup(key.components)
+                if ext is None:
+                    break
+                extents.append(ext)
+            if len(extents) < len(keys):
+                if st is not None:
+                    # per-key units, like arena_hits: every key of the item
+                    # is served by the host pack
+                    st.arena_misses += len(keys)
+                # carry the selected keys: the host pack accepts 3-tuples,
+                # so key selection is not recomputed for the fallback
+                host_work[qi].append((sub, view, keys))
+                continue
+
+            def account(hit=True, st=st, keys=keys, extents=extents):
+                # §11 accounting parity with the host pack: the arena path
+                # reads the same rows, just on the device.  ``hit=False``
+                # records an overflow fallback — the keys resolved but the
+                # batch executed on the host, which does its own counting.
+                if st is None:
+                    return
+                if not hit:
+                    st.arena_misses += len(keys)
+                    return
+                st.arena_hits += len(keys)
+                for ext in extents:
+                    st.postings_read += ext.n_rows
+                    st.bytes_read += ext.n_rows * 4 * POSTING_WIDTH.get(
+                        ext.family, 2
+                    )
+
+            # provably-empty short-circuits, mirroring the host pack
+            # (extract_segment_events returning None):
+            if (
+                not keys
+                or all(e.n_rows == 0 for e in extents)
+                or (len(keys) >= 2 and any(e.n_rows == 0 for e in extents))
+            ):
+                account()
+                if st is not None:
+                    st.empty_subqueries += 1
+                continue
+            arena_items.append((qi, sub, keys, extents, res))
+            # fallback bookkeeping: the (sub, view, keys) item for host
+            # re-queueing (keys carried, not recomputed), the accounting
+            # thunk applied ONLY if the arena plan succeeds (on
+            # ArenaOverflow the host pack does its own counting — no double
+            # charge, no phantom arena_hits)
+            arena_fallback.append((qi, (sub, view, keys), account))
+
+    results: list[FusedBatchResult] = []
+    if arena_items:
+        try:
+            aplan = plan_arena_batch(arena_items, n_queries=len(work))
+        except ArenaOverflow:
+            aplan = None
+            for qi, item3, account in arena_fallback:
+                account(hit=False)
+                host_work[qi].append(item3)
+        if aplan is not None:
+            for _qi, _item3, account in arena_fallback:
+                account()
+        # the arena's whole host side — routing + descriptor planning —
+        # is the pack phase (there is no plan phase: no posting is read)
+        t0 = _phase(sink, "pack_us", t0)
+        if aplan is not None:
+            results.append(
+                run_arena_batch(
+                    aplan,
+                    max_distance=max_distance,
+                    top_k=top_k,
+                    use_kernel=use_kernel,
+                    interpret=interpret,
+                    stats=batch_stats,
+                    phases=sink,
+                )
+            )
+            _DISPATCHES += 1
+    if any(host_work):
+        hplan = plan_query_batch(
+            host_work,
+            doc_len=doc_len,
+            stats=stats,
+            intersect_device_threshold=intersect_device_threshold,
+        )
+        if hplan is not None:
+            results.append(
+                run_query_batch(
+                    hplan,
+                    max_distance=max_distance,
+                    top_k=top_k,
+                    use_kernel=use_kernel,
+                    compute_dtype=compute_dtype,
+                    interpret=interpret,
+                    stats=batch_stats,
+                )
+            )
+    if not results:
+        return empty_batch_result(len(work), top_k)
+    return _merge_results(results, len(work), top_k)

@@ -47,7 +47,7 @@ from ..core.keys import (
 from ..core.lemma import FLList, Lemmatizer, LemmaType
 from ..core.postings import QueryStats
 from ..index.builder import IndexSet
-from .fused import empty_batch_result, plan_query_batch, run_query_batch
+from .fused import serve_query_batch
 from .relevance import rank_documents
 
 __all__ = [
@@ -289,17 +289,21 @@ def execute_plans(
     use_kernel: bool = False,
     compute_dtype: str = "uint8",
     admitted: Sequence[Sequence[SubqueryPlan]] | None = None,
+    residencies: dict | None = None,
 ) -> list:
     """Execute a batch of plans as ONE fused device dispatch (§5 stage 3–4).
 
     ``admitted[qi]`` optionally restricts query ``qi`` to a subquery subset
     (the frontend's deadline admission); default is every executable
-    subquery.  Each subquery carries its plan's key bindings into
-    ``plan_query_batch``, so execution reads exactly the costed postings.
-    Returns ``QueryResponse`` objects whose fragment sets are byte-identical
-    to the unplanned engines over the admitted subqueries (exactness pinned
-    by ``tests/test_planner.py``); ranking is ``rank_documents`` over the
-    exact fragment union, identical to ``SearchEngine``.
+    subquery.  Each subquery carries its plan's key bindings into the batch
+    packer, so execution reads exactly the costed postings.  ``residencies``
+    maps ``id(view)`` to a posting-arena residency (DESIGN.md §13): resident
+    work items gather/pack on device, the rest take the host path —
+    fragments are identical either way.  Returns ``QueryResponse`` objects
+    whose fragment sets are byte-identical to the unplanned engines over the
+    admitted subqueries (exactness pinned by ``tests/test_planner.py``);
+    ranking is ``rank_documents`` over the exact fragment union, identical
+    to ``SearchEngine``.
     """
     from .engine import QueryResponse, RankedDoc
 
@@ -311,21 +315,23 @@ def execute_plans(
         [(sp.subquery, view, sp.keys) for sp in subs for view in views]
         for subs in admitted
     ]
-    batch_plan = plan_query_batch(work, doc_len=doc_len, stats=per_stats)
-    if batch_plan is None:
-        result = empty_batch_result(len(plans), top_k)
-    else:
-        batch_stats = QueryStats()
-        result = run_query_batch(
-            batch_plan,
-            max_distance=max_distance,
-            top_k=top_k,
-            use_kernel=use_kernel,
-            compute_dtype=compute_dtype,
-            stats=batch_stats,
-        )
-        for st in per_stats:
-            st.device_dispatches = batch_stats.device_dispatches
+    batch_stats = QueryStats()
+    result = serve_query_batch(
+        work,
+        max_distance=max_distance,
+        top_k=top_k,
+        doc_len=doc_len,
+        use_kernel=use_kernel,
+        compute_dtype=compute_dtype,
+        stats=per_stats,
+        batch_stats=batch_stats,
+        residencies=residencies,
+    )
+    for st in per_stats:
+        # batch-level quantities: one shared dispatch/transfer, assigned
+        # (not accumulated) per query so aggregation never over-counts
+        st.device_dispatches = batch_stats.device_dispatches
+        st.h2d_bytes = batch_stats.h2d_bytes
     elapsed = time.perf_counter() - t0
     responses = []
     for qi, plan in enumerate(plans):

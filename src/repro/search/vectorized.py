@@ -24,10 +24,8 @@ from ..index.builder import IndexSet
 from .fused import (
     FusedBatchResult,
     bucket_pow2,
-    empty_batch_result,
     extract_segment_events,
-    plan_query_batch,
-    run_query_batch,
+    serve_query_batch,
 )
 
 __all__ = ["VectorizedEngine", "PackedEvents", "pack_subquery_events"]
@@ -91,12 +89,16 @@ class VectorizedEngine:
         use_kernel: bool = False,
         doc_len: int = 512,
         compute_dtype: str = "uint8",
+        arena=None,
     ):
         # plain IndexSet or IncrementalIndexer (live view resolved per call)
         self._index_source = index
         self.use_kernel = use_kernel
         self.doc_len = doc_len
         self.compute_dtype = compute_dtype
+        # optional device-resident posting arena (DESIGN.md §13): resident
+        # keys gather/pack on device, others fall back to the host path
+        self.arena = arena
 
     @property
     def index(self) -> IndexSet:
@@ -119,23 +121,25 @@ class VectorizedEngine:
         batch-level either way.
         """
         stats = QueryStats()
-        work = [[(sub, self.index) for sub in subs] for subs in batch]
-        plan = plan_query_batch(
+        view = self.index
+        work = [[(sub, view) for sub in subs] for subs in batch]
+        residencies = None
+        if self.arena is not None:
+            from ..index.incremental import generation_token
+
+            res = self.arena.acquire(view, generation_token(self._index_source))
+            residencies = {id(view): res}
+        result = serve_query_batch(
             work,
+            max_distance=view.max_distance,
+            top_k=top_k,
             doc_len=self.doc_len,
+            use_kernel=self.use_kernel,
+            compute_dtype=self.compute_dtype,
             stats=per_query_stats if per_query_stats is not None else stats,
+            batch_stats=stats,
+            residencies=residencies,
         )
-        if plan is None:
-            result = empty_batch_result(len(batch), top_k)
-        else:
-            result = run_query_batch(
-                plan,
-                max_distance=self.index.max_distance,
-                top_k=top_k,
-                use_kernel=self.use_kernel,
-                compute_dtype=self.compute_dtype,
-                stats=stats,
-            )
         if per_query_stats is not None:
             for st in per_query_stats:
                 st.device_dispatches = stats.device_dispatches

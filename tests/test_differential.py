@@ -18,6 +18,12 @@ Pins the two contracts every engine-level refactor must preserve:
    whose lazily decoded postings serve byte-identical fragments through
    every engine.
 
+4. **Arena == host pack == oracle** — the DESIGN.md §13 device-resident
+   posting arena serves byte-identical fragments to the host-pack path
+   across live add/delete/compact sequences (generation bumps must evict
+   stale device buffers) and under budget-forced partial residency
+   (non-resident keys fall back to the host pack mid-batch).
+
 Runs under real ``hypothesis`` (fixed seed via ``derandomize``) or the
 deterministic shim — both bounded to a small example budget for CI.
 """
@@ -193,6 +199,63 @@ def _check_restored(ix, rx, spec, seed):
                 query,
                 f"fused(kernel={use_kernel}) restored != live",
             )
+
+
+# ---------------------------------------------------------------------------
+# 4. DESIGN.md §13: arena path == host-pack path == oracle, under mutation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seeds)
+def test_arena_matches_host_and_oracle_under_mutation(seed):
+    """The device-resident arena serves byte-identical fragments to the
+    host pack and the §10 oracle over the zipf corpora, including mid-run
+    commit/delete/compact (generation bumps evict stale arena buffers via
+    the mutation hook) and a budget that forces partial residency."""
+    from repro.search.arena import PostingArena
+    from repro.search.frontend import ServingFrontend
+
+    spec = make_corpus(seed, max_docs=8)
+    ix = _run_ops(spec, seed)
+    store = ix.surviving_store()
+    arena = PostingArena()
+    arena.attach(ix)
+    fa = ServingFrontend(ix, lemmatizer=store.lemmatizer, arena=arena)
+    queries = make_queries(seed, spec, n_queries=2)
+
+    def check(tag):
+        st2 = ix.surviving_store()
+        host = SearchEngine(ix, lemmatizer=st2.lemmatizer, algorithm="fused")
+        for query in queries:
+            ra = fa.search(query, top_k=32)
+            rb = host.search(query, top_k=32)
+            assert _response_frags(ra) == _response_frags(rb), (query, tag)
+            oracle_union = set()
+            for sub in expand_subqueries(query, st2.lemmatizer):
+                oracle_union |= _frag_set(_oracle_subquery(sub, ix.index))
+            assert set(_response_frags(ra)) == oracle_union, (query, tag, "oracle")
+
+    check("post-ops")
+    # live mutations between serves: the arena must track every generation
+    ix.add_documents(["who are you who to be or not to be"])
+    ix.commit()
+    check("post-commit")
+    victims = sorted(ix.documents)
+    if victims:
+        ix.delete_document(victims[len(victims) // 2])
+    check("post-delete")
+    ix.compact()
+    check("post-compact")
+    # budget-forced partial residency: roughly one family fits
+    sizes = sorted(fb.nbytes for fb in arena._entries.values()) or [1024]
+    tiny = PostingArena(budget_bytes=sizes[0] + 1)
+    ft = ServingFrontend(ix, lemmatizer=store.lemmatizer, arena=tiny)
+    check_host = SearchEngine(ix, lemmatizer=store.lemmatizer, algorithm="fused")
+    for query in queries:
+        ra = ft.search(query, top_k=32)
+        rb = check_host.search(query, top_k=32)
+        assert _response_frags(ra) == _response_frags(rb), (query, "partial-residency")
 
 
 @settings(max_examples=4, deadline=None, derandomize=True)
