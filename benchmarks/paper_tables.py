@@ -727,3 +727,196 @@ def bench_persistence(n_docs=120, doc_len=180, n_batches=4, quick=False):
         "restore_equality": bool(eq),
         "mismatch_reason": "" if eq else why,
     }
+
+
+def bench_robustness(quick=False, chaos_seeds=(101, 202, 303)):
+    """Resilient-serving bench (DESIGN.md §14): what failure costs, and the
+    gates proving it never costs correctness.
+
+    Five measurements over one sharded incremental service:
+
+      * ``fault_free``    — per-batch p50/p99 with the resilience layer ON
+        but an empty fault schedule, plus the clean-counters check (every
+        §14 counter must be zero — the layer must be free when nothing
+        fails);
+      * ``degraded``      — per-batch p50/p99 with one shard killed and
+        recovery disabled: flagged rate must be 1.0 and every response must
+        equal the baseline minus exactly the dead shard's documents;
+      * ``recovery``      — wall time of the batch in which a killed shard
+        is detected and re-restored from its §12.2 snapshot, vs the
+        fault-free batch time; post-recovery responses must equal the
+        baseline exactly;
+      * ``chaos``         — the seeded chaos-differential sweep (the CI
+        gate): for each schedule seed, every response over the run is
+        either exact (== the clean baseline) or flagged partial with exact
+        coverage of the surviving shards.  ``mismatches`` must be 0.
+
+    The gates feed ``benchmarks/run.py`` (``chaos_results_MISMATCH``,
+    ``robustness_counters_DIRTY``) and ``BENCH_robustness.json``.
+    """
+    import shutil
+    import tempfile
+    from pathlib import Path as _Path
+
+    from repro.runtime.fault_tolerance import RestartPolicy
+    from repro.search.distributed import ShardedSearchService
+    from repro.search.resilience import (
+        FaultEvent,
+        FaultInjector,
+        ResiliencePolicy,
+    )
+
+    n_shards = 3
+    n_docs = 36 if quick else 60
+    rounds = 6 if quick else 12
+    store = synthesize_corpus(n_docs=n_docs, doc_len=120, vocab_size=1500,
+                              seed=7)
+    queries = [
+        "who are you who", "to be or not to be", "what do you do all day",
+    ]
+    kw = dict(n_shards=n_shards, sw_count=40, fu_count=120, max_distance=5,
+              algorithm="fused", incremental=True)
+    policy_kw = dict(
+        restart=RestartPolicy(max_restarts=2, min_backoff_s=0.0),
+        breaker_cooldown_s=0.0,
+    )
+    top_k = 10_000  # past every doc: fragment sets compare fully
+
+    def frags(resp):
+        return {(d.doc_id, f.start, f.end) for d in resp.docs
+                for f in d.fragments}
+
+    # clean baseline: no resilience layer at all
+    baseline_svc = ShardedSearchService(store, **kw)
+    baseline_svc.search_batch(queries, top_k=top_k)  # jit warm
+    baseline = [frags(r) for r in baseline_svc.search_batch(queries, top_k=top_k)]
+
+    def run_batches(svc, n):
+        times, resps = [], []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            out = svc.search_batch(queries, top_k=top_k)
+            times.append(time.perf_counter() - t0)
+            resps.append(out)
+        return np.asarray(times), resps
+
+    tmpdir = _Path(tempfile.mkdtemp(prefix="bench_robust_"))
+    try:
+        # ---- fault-free pass: latency + the clean-counters gate -----------
+        svc = ShardedSearchService(store, **kw)
+        svc.snapshot(tmpdir / "ff")
+        svc.enable_resilience(policy=ResiliencePolicy(**policy_kw))
+        ff_times, ff_resps = run_batches(svc, rounds)
+        counters_clean = all(
+            (r.stats.retries, r.stats.hedges, r.stats.shards_degraded,
+             r.stats.recoveries, r.stats.shed) == (0, 0, 0, 0, 0)
+            and not r.stats.partial
+            for out in ff_resps for r in out
+        )
+        ff_match = all(
+            [frags(r) for r in out] == baseline for out in ff_resps
+        )
+
+        # ---- degraded pass: one shard down, recovery off ------------------
+        dead = 1
+        svc = ShardedSearchService(store, **kw)
+        svc.enable_resilience(
+            policy=ResiliencePolicy(recover=False, **policy_kw),
+            injector=FaultInjector(schedule=[
+                FaultEvent("shard.search", "kill", shard=dead, at_call=0),
+            ]),
+        )
+        deg_times, deg_resps = run_batches(svc, rounds)
+        flagged = sum(
+            1 for out in deg_resps for r in out
+            if r.stats.partial and r.stats.shards_degraded == 1
+        )
+        deg_total = sum(len(out) for out in deg_resps)
+        deg_expected = [
+            {f for f in b if f[0] % n_shards != dead} for b in baseline
+        ]
+        deg_match = all(
+            [frags(r) for r in out] == deg_expected for out in deg_resps
+        )
+
+        # ---- recovery pass: kill -> detect -> snapshot re-restore ---------
+        svc = ShardedSearchService(store, **kw)
+        svc.snapshot(tmpdir / "rec")
+        svc.enable_resilience(
+            policy=ResiliencePolicy(**policy_kw),
+            injector=FaultInjector(schedule=[
+                FaultEvent("shard.search", "kill", shard=dead, at_call=1),
+            ]),
+        )
+        svc.search_batch(queries, top_k=top_k)  # arrival 0: healthy
+        t0 = time.perf_counter()
+        rec_out = svc.search_batch(queries, top_k=top_k)  # arrival 1: kill
+        recovery_batch_sec = time.perf_counter() - t0
+        rec_match = (
+            [frags(r) for r in rec_out] == baseline
+            and all(r.stats.recoveries == 1 for r in rec_out)
+            and all(r.stats.shards_degraded == 0 for r in rec_out)
+        )
+
+        # ---- seeded chaos-differential sweep (the CI gate) ----------------
+        chaos_responses = 0
+        chaos_flagged = 0
+        chaos_mismatches = 0
+        chaos_fired = 0
+        for seed in chaos_seeds:
+            svc = ShardedSearchService(store, **kw)
+            svc.snapshot(tmpdir / f"chaos_{seed}")
+            svc.enable_resilience(
+                policy=ResiliencePolicy(**policy_kw),
+                injector=FaultInjector.from_seed(seed, n_shards=n_shards),
+            )
+            for _ in range(rounds):
+                out = svc.search_batch(queries, top_k=top_k)
+                excluded = svc.supervisor.last_excluded
+                for got_resp, want in zip(out, baseline):
+                    chaos_responses += 1
+                    got = frags(got_resp)
+                    if got_resp.stats.shards_degraded:
+                        chaos_flagged += 1
+                        ok = got_resp.stats.partial and got == {
+                            f for f in want if f[0] % n_shards not in excluded
+                        }
+                    else:
+                        ok = not got_resp.stats.partial and got == want
+                    chaos_mismatches += 0 if ok else 1
+            chaos_fired += len(svc.injector.log)
+
+        pct = lambda a, p: float(np.percentile(a, p) * 1e6)
+        return {
+            "fault_free": {
+                "p50_us": pct(ff_times, 50),
+                "p99_us": pct(ff_times, 99),
+                "counters_clean": bool(counters_clean),
+                "results_match": bool(ff_match),
+            },
+            "degraded": {
+                "p50_us": pct(deg_times, 50),
+                "p99_us": pct(deg_times, 99),
+                "flagged_rate": flagged / max(deg_total, 1),
+                "results_match": bool(deg_match),
+            },
+            "recovery": {
+                "batch_ms": 1000 * recovery_batch_sec,
+                "fault_free_batch_ms": 1000 * float(np.median(ff_times)),
+                "results_match": bool(rec_match),
+            },
+            "chaos": {
+                "seeds": list(chaos_seeds),
+                "rounds": rounds,
+                "responses": chaos_responses,
+                "flagged": chaos_flagged,
+                "faults_fired": chaos_fired,
+                "mismatches": chaos_mismatches,
+            },
+            "results_match": bool(
+                ff_match and deg_match and rec_match
+                and chaos_mismatches == 0
+            ),
+        }
+    finally:
+        shutil.rmtree(tmpdir, ignore_errors=True)

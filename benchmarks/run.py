@@ -3,7 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows (per harness contract) and a
 human-readable table; roofline sections read the dry-run artifacts.
 ``--json`` additionally records the serving comparison (seed per-subquery
-path vs fused query-at-a-time batch) in ``BENCH_serving.json``.
+path vs fused query-at-a-time batch) in ``BENCH_serving.json``, the
+indexing/persistence numbers in ``BENCH_indexing.json``, and the §14
+resilience numbers (recovery time, degraded p50/p99, the seeded
+chaos-differential gate) in ``BENCH_robustness.json``.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json]
 """
@@ -24,6 +27,7 @@ from benchmarks.paper_tables import (  # noqa: E402
     bench_frontend,
     bench_indexing,
     bench_persistence,
+    bench_robustness,
     bench_serving,
     bench_serving_results_match,
     bench_vectorized,
@@ -194,6 +198,42 @@ def main() -> None:
     if args.json:
         out_path = Path(__file__).parent.parent / "BENCH_indexing.json"
         out_path.write_text(json.dumps(indexing, indent=2) + "\n")
+        print(f"# wrote {out_path}")
+
+    # ---- resilient serving under injected faults (DESIGN.md §14) -----------
+    robustness = bench_robustness(quick=args.quick)
+    ff, deg, rec, chaos = (robustness[k] for k in
+                           ("fault_free", "degraded", "recovery", "chaos"))
+    print(f"robustness_fault_free,{ff['p50_us']:.0f},"
+          f"p99_us={ff['p99_us']:.0f};counters_clean={ff['counters_clean']}")
+    print(f"robustness_degraded,{deg['p50_us']:.0f},"
+          f"p99_us={deg['p99_us']:.0f};flagged_rate={deg['flagged_rate']:.2f}")
+    print(f"robustness_recovery,{rec['batch_ms']*1000:.0f},"
+          f"batch_ms={rec['batch_ms']:.1f};"
+          f"fault_free_batch_ms={rec['fault_free_batch_ms']:.1f}")
+    print(f"robustness_chaos,{chaos['responses']},"
+          f"seeds={len(chaos['seeds'])};flagged={chaos['flagged']};"
+          f"faults_fired={chaos['faults_fired']};"
+          f"mismatches={chaos['mismatches']}")
+    # CI gates (benchmarks/README.md): under ANY seeded fault schedule every
+    # response must be exact or flagged-partial-with-exact-coverage; a
+    # degraded fan-out must flag 100% of its responses; and fault-free
+    # traffic must leave every §14 counter zero
+    if chaos["mismatches"] or not robustness["results_match"]:
+        print(f"chaos_results_MISMATCH,0,mismatches={chaos['mismatches']};"
+              f"fault_free={ff['results_match']};"
+              f"degraded={deg['results_match']};"
+              f"recovery={rec['results_match']}")
+        sys.exit(1)
+    if deg["flagged_rate"] < 1.0:
+        print(f"robustness_flag_GATE,0,flagged_rate={deg['flagged_rate']:.2f}")
+        sys.exit(1)
+    if not ff["counters_clean"]:
+        print("robustness_counters_DIRTY,0,fault-free counters non-zero")
+        sys.exit(1)
+    if args.json:
+        out_path = Path(__file__).parent.parent / "BENCH_robustness.json"
+        out_path.write_text(json.dumps(robustness, indent=2) + "\n")
         print(f"# wrote {out_path}")
 
     # ---- roofline (from dry-run artifacts, if present) ----------------------

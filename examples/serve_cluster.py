@@ -71,6 +71,11 @@ print(f"SE1 ordinary-index baseline: {t1*1000:.0f} ms, {p1/len(QUERIES):.0f} "
       f"{p1/max(total_postings,1):.0f}x fewer postings")
 
 # ---- dead-shard drill ----------------------------------------------------
+# dead_shards= routes through the §14 resilience layer (hold-down scoped to
+# this call): the shard is excluded like a failed one, the response is
+# flagged via stats.shards_degraded, and the next call serves it again.
+# For injected faults + automatic snapshot recovery see DESIGN.md §14 and
+# `python -m repro.launch.serve --chaos-seed`.
 resp_full = svc.search("who are you who", top_k=50)
 resp_degraded = svc.search("who are you who", top_k=50, dead_shards=[3])
 lost = {d.doc_id for d in resp_full.docs} - {d.doc_id for d in resp_degraded.docs}

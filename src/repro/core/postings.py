@@ -65,6 +65,15 @@ class QueryStats:
     arena_hits: int = 0  # keys served from device-resident extents
     arena_misses: int = 0  # keys that fell back to the host-pack path
     h2d_bytes: int = 0  # bytes actually shipped host->device this query/batch
+    # ---- resilience counters (PR 6, DESIGN.md §14) ------------------------
+    # batch-level like device_dispatches: the probe barrier runs once per
+    # batch, so every response in the batch reports the same values.
+    # Fault-free traffic leaves ALL of them at zero (pinned by tests).
+    retries: int = 0  # transient-crash probe retries (RestartPolicy backoff)
+    hedges: int = 0  # straggler probes raced against a hedged second attempt
+    shards_degraded: int = 0  # shards excluded from this response's fan-out
+    recoveries: int = 0  # shards re-restored from snapshot for this batch
+    shed: int = 0  # request load-shed to the admission-control budget
 
     def merge(self, other: "QueryStats") -> None:
         self.postings_read += other.postings_read
@@ -85,6 +94,11 @@ class QueryStats:
         self.arena_hits += other.arena_hits
         self.arena_misses += other.arena_misses
         self.h2d_bytes += other.h2d_bytes
+        self.retries += other.retries
+        self.hedges += other.hedges
+        self.shards_degraded = max(self.shards_degraded, other.shards_degraded)
+        self.recoveries += other.recoveries
+        self.shed = max(self.shed, other.shed)
 
 
 class KeyIterator:

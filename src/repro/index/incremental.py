@@ -555,12 +555,15 @@ class IncrementalIndexer:
         use_mmap: bool = True,
         verify: bool = True,
         lemmatizer: Lemmatizer | None = None,
+        injector=None,
     ) -> "IncrementalIndexer":
         """Warm-start an indexer from a §12.2 snapshot: segments serve
         lazily from ``mmap`` pages, nothing is replayed or re-lemmatized,
         and the restored index is exact (``index_sets_equal`` vs the
         snapshotted live view — the §12 contract the differential harness
-        pins).  Raises ``StoreError`` on corruption."""
+        pins).  Raises ``StoreError`` on corruption.  ``injector`` is the
+        §14 fault-injection hook passed through to ``load_snapshot`` (the
+        chaos harness corrupts snapshot bytes for real there)."""
         from .store import load_snapshot
 
         return load_snapshot(
@@ -569,6 +572,7 @@ class IncrementalIndexer:
             use_mmap=use_mmap,
             verify=verify,
             lemmatizer=lemmatizer,
+            injector=injector,
         )
 
     # -- ingest / delete ----------------------------------------------------

@@ -796,6 +796,7 @@ def load_snapshot(
     use_mmap: bool = True,
     verify: bool = True,
     lemmatizer=None,
+    injector=None,
 ):
     """Restore an ``IncrementalIndexer`` from a §12.2 snapshot — warm start:
     no re-lemmatization, no index rebuild, no replay; segments serve lazily
@@ -805,7 +806,13 @@ def load_snapshot(
     from the stored generation.  Its generation token resumes under a
     bumped restore epoch (§12.5), so cached results keyed by pre-restart
     tokens can never be served against post-restart states.  Raises
-    :class:`StoreError` on any corruption (see ``open_segment_store``)."""
+    :class:`StoreError` on any corruption (see ``open_segment_store``).
+
+    ``injector`` is the §14 (DESIGN.md) fault-injection hook: a scheduled
+    ``bitflip`` event physically corrupts a blob of THIS snapshot on disk
+    before it is read, so the CRC verify below rejects it for real and
+    recovery walks back to an older snapshot — the detection path under
+    test is the production one, not a mock."""
     from .incremental import IncrementalIndexer, Segment
 
     directory = Path(directory)
@@ -813,6 +820,8 @@ def load_snapshot(
     if sid is None:
         raise StoreError(f"no snapshot found in {directory}")
     path = directory / f"{SNAPSHOT_PREFIX}_{sid}"
+    if injector is not None:
+        injector.fire("store.load_snapshot", path=path)
     m = _load_manifest(path / _MANIFEST, expect_kind="snapshot")
 
     fl = None

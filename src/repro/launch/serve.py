@@ -22,7 +22,15 @@ Useful flags:
                       serve straight from mmap'd disk pages — no corpus
                       build, no re-lemmatization; otherwise build the
                       corpus once and snapshot into the directory so the
-                      NEXT run warm-starts (the crash-recovery loop).
+                      NEXT run warm-starts (the crash-recovery loop);
+* ``--chaos-seed``    serve under a seeded fault schedule (DESIGN.md §14):
+                      shard crashes/kills, straggler delays, snapshot
+                      bit-flips fire deterministically at the §14 injection
+                      points while the resilience layer detects, retries
+                      and recovers.  Responses stay exact or flagged
+                      DEGRADED; pair with ``--snapshot-dir`` so killed
+                      shards can recover from durable snapshots, and with
+                      ``--repeat`` to watch recovery happen mid-run.
 """
 
 from __future__ import annotations
@@ -34,10 +42,20 @@ def _print_response(resp, show_partial: bool = True) -> None:
     flags = []
     if resp.stats.cache_hits:
         flags.append("CACHED")
-    if show_partial and resp.stats.partial:
+    if resp.stats.shards_degraded:
+        flags.append(f"DEGRADED ({resp.stats.shards_degraded} shard(s) down)")
+    if resp.stats.shed:
+        flags.append("SHED")
+    if show_partial and resp.stats.partial and not resp.stats.shards_degraded:
         flags.append(
             f"PARTIAL (skipped {resp.stats.skipped_subqueries} subqueries)"
         )
+    # §14 failure-path counters (batch-level): only shown when non-zero, so
+    # fault-free serving output is unchanged
+    for name in ("retries", "hedges", "recoveries"):
+        n = getattr(resp.stats, name)
+        if n:
+            flags.append(f"{name}={n}")
     tag = f"  [{', '.join(flags)}]" if flags else ""
     print(
         f"\nquery: {resp.query!r}  ({resp.n_subqueries} subqueries, "
@@ -81,6 +99,11 @@ def main() -> None:
     ap.add_argument("--snapshot-dir", default=None,
                     help="warm start from (or bootstrap) a durable index "
                          "snapshot directory (DESIGN.md §12)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="serve under the §14 seeded fault schedule: "
+                         "deterministic shard crashes/kills, stragglers and "
+                         "snapshot bit-flips, detected and recovered by the "
+                         "resilience layer (recovery needs --snapshot-dir)")
     ap.add_argument("--arena-budget-mb", type=float, default=64.0,
                     help="device-resident posting arena byte budget "
                          "(DESIGN.md §13; 0 disables — frontend mode only): "
@@ -134,13 +157,29 @@ def main() -> None:
             store, n_shards=args.n_shards, sw_count=args.sw_count,
             fu_count=args.fu_count, max_distance=args.max_distance,
             algorithm=args.algorithm,
-            incremental=bool(args.snapshot_dir),
+            # chaos mode wants incremental shards too: snapshot recovery
+            # (the §14 failure path) only exists for IncrementalIndexer
+            incremental=bool(args.snapshot_dir) or args.chaos_seed is not None,
         )
         build_ms = (time.perf_counter() - t0) * 1000
         if args.snapshot_dir:
             svc.snapshot(args.snapshot_dir)
             print(f"cold start: built in {build_ms:.0f} ms, snapshotted to "
                   f"{args.snapshot_dir} (rerun to warm-start)")
+
+    if args.chaos_seed is not None:
+        from ..search.resilience import FaultInjector, ResiliencePolicy
+
+        injector = FaultInjector.from_seed(args.chaos_seed, n_shards=svc.n_shards)
+        svc.enable_resilience(
+            policy=ResiliencePolicy(snapshot_dir=args.snapshot_dir),
+            injector=injector,
+        )
+        print(f"chaos: seed {args.chaos_seed} armed "
+              f"{len(injector.schedule)} fault event(s) at the §14 "
+              f"injection points"
+              + ("" if args.snapshot_dir else
+                 " (no --snapshot-dir: killed shards stay degraded)"))
 
     # --kill-shard / a non-default --algorithm only make sense on the raw
     # engine path: honor them there instead of silently ignoring them
@@ -154,6 +193,7 @@ def main() -> None:
         for q in args.queries * args.repeat:
             resp = svc.search(q, top_k=args.top_k, dead_shards=args.kill_shard)
             _print_response(resp, show_partial=False)
+        _print_resilience(svc.resilience_metrics())
         return
 
     from ..search.frontend import SearchRequest, ServingFrontend
@@ -195,6 +235,22 @@ def main() -> None:
             f"{m['arena_upload_bytes'] / (1 << 20):.1f} MB shipped once per "
             f"generation)"
         )
+    _print_resilience(m.get("resilience", {}), sheds=m.get("sheds", 0))
+
+
+def _print_resilience(rm: dict, sheds: int = 0) -> None:
+    """Post-run §14 report: fired faults, breaker states, recoveries.
+    Silent when the resilience layer is off (no --chaos-seed, no
+    --kill-shard), so fault-free output is unchanged."""
+    if not rm:
+        return
+    print(
+        f"resilience: {rm['fired']} fault(s) fired, "
+        f"{rm['recoveries']} snapshot recoveries, "
+        f"{rm['errors']} probe errors, "
+        f"breakers {rm['breaker_states']}, "
+        f"down={rm['down']} stragglers={rm['stragglers']} sheds={sheds}"
+    )
 
 
 if __name__ == "__main__":

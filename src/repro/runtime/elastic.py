@@ -5,6 +5,13 @@ different chip count only requires a new mesh + re-derived shardings.  The
 policy here picks the largest (pods x data x model) grid that (a) fits the
 surviving chips, (b) keeps the model axis unchanged (TP degree is baked into
 layer shapes' divisibility), and (c) keeps the global batch divisible.
+
+Scope after PR 6 (DESIGN.md §14): this planner is TRAINING-only — it
+remaps the accelerator mesh for offline jobs driven by
+``fault_tolerance.run_with_restarts``.  Serving-side failure handling
+(shard health, snapshot recovery, degraded fan-out) deliberately does NOT
+remap topology; it lives in ``search/resilience.py``, where a crashed
+document shard recovers from its §12.2 snapshot in place.
 """
 
 from __future__ import annotations

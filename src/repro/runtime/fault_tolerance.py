@@ -5,6 +5,16 @@ On a real multi-pod deployment each pod runs this driver; the coordinator
 triggers a restart from the latest durable checkpoint with the surviving
 topology (see ``elastic.py``).  The logic is hardware-agnostic and unit
 tested by injecting failures.
+
+Scope after PR 6 (DESIGN.md §14): this module is the TRAINING-loop side
+of fault tolerance — ``run_with_restarts`` drives offline index-build /
+calibration jobs against a ``CheckpointManager``.  The SERVING side lives
+in ``search/resilience.py``, which wires :class:`RestartPolicy` into the
+shard probe barrier (retry backoff for transient crashes) and owns the
+canonical MAD straggler rule (``mad_stragglers``); the
+:class:`StragglerMonitor` here keeps its training-driver interface but
+delegates the math there, so the two layers can never disagree on what a
+straggler is.
 """
 
 from __future__ import annotations
@@ -13,13 +23,15 @@ import dataclasses
 import time
 from typing import Any, Callable
 
-import numpy as np
-
 __all__ = ["RestartPolicy", "run_with_restarts", "StragglerMonitor"]
 
 
 @dataclasses.dataclass
 class RestartPolicy:
+    """Exponential-backoff restart budget, shared by the training driver
+    below and the serving probe barrier (``search/resilience.py``, DESIGN.md
+    §14) — one retry policy for both layers."""
+
     max_restarts: int = 10
     min_backoff_s: float = 0.0  # 0 for tests; seconds in production
     backoff_factor: float = 2.0
@@ -85,6 +97,12 @@ class StragglerMonitor:
     one pod's step time sitting k MADs above the fleet median.  The runtime
     swaps the straggler with a spare pod (topology remap) at the next
     checkpoint boundary rather than killing the job.
+
+    The MAD rule itself is owned by ``search.resilience.mad_stragglers``
+    (DESIGN.md §14) — the serving ``HealthMonitor`` applies the identical
+    criterion to shard probe latencies, so training and serving agree on
+    what a straggler is.  This class keeps the training-driver interface
+    (``record``/``stragglers``) and delegates.
     """
 
     def __init__(self, n_workers: int, window: int = 20, mad_threshold: float = 5.0):
@@ -100,10 +118,6 @@ class StragglerMonitor:
             t.pop(0)
 
     def stragglers(self) -> list[int]:
-        med_per = [float(np.median(t)) if t else 0.0 for t in self._times]
-        fleet = np.median([m for m in med_per if m > 0] or [0.0])
-        mad = np.median([abs(m - fleet) for m in med_per if m > 0] or [0.0])
-        if fleet == 0:
-            return []
-        thr = fleet + self.mad_threshold * max(mad, 0.05 * fleet)
-        return [i for i, m in enumerate(med_per) if m > thr]
+        from ..search.resilience import mad_stragglers
+
+        return mad_stragglers(self._times, self.mad_threshold)

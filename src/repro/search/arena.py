@@ -218,6 +218,12 @@ class PostingArena:
         self.uploads = 0
         self.upload_bytes = 0  # H2D bytes spent on arena uploads
         self.evictions = 0
+        # §14 fault-injection hook (DESIGN.md §14): when set, acquire
+        # rounds fire the "arena.acquire" injection point; injected
+        # pressure refuses the whole round (host fallback, fragments
+        # identical) instead of erroring
+        self.injector = None
+        self.pressure_events = 0
 
     # ---- residency --------------------------------------------------------
 
@@ -234,6 +240,20 @@ class PostingArena:
         the round's working set yields stable partial residency (some
         families non-resident, host fallback) instead of shards evicting one
         another's buffers and re-uploading every batch."""
+        if self.injector is not None:
+            from .resilience import InjectedFault
+
+            try:
+                self.injector.fire("arena.acquire")
+            except InjectedFault:
+                # injected device-memory pressure (§14): refuse the round —
+                # empty residencies route every key through the host pack,
+                # so fragments are identical, only locality degrades
+                self.pressure_events += 1
+                return [
+                    ArenaResidency(token=token, shard=shard)
+                    for _view, token, shard in specs
+                ]
         # entry keys carry a per-VIEW identity stamped on first acquire:
         # generation tokens alone are not globally unique (every plain
         # IndexSet has token 0; two indexers can share (epoch, mutations)),
@@ -426,6 +446,7 @@ class PostingArena:
             "arena_uploads": self.uploads,
             "arena_upload_bytes": self.upload_bytes,
             "arena_evictions": self.evictions,
+            "arena_pressure_events": self.pressure_events,
         }
 
 

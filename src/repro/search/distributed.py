@@ -89,6 +89,8 @@ class ShardedSearchService:
         doc_len: int = 512,
         incremental: bool = False,
         arena=None,
+        resilience=None,
+        injector=None,
     ):
         from ..core.lemma import FLList
 
@@ -106,6 +108,12 @@ class ShardedSearchService:
         self.lemmatizer = store.lemmatizer
         self.indexers = None
         self._static_shards: list[IndexSet] = []
+        # resilience layer (DESIGN.md §14): detection/recovery instead of a
+        # caller-supplied dead list; None until enable_resilience (the
+        # legacy dead_shards= argument enables it lazily)
+        self.supervisor = None
+        self.injector = injector
+        self.last_snapshot_dir = None
         if incremental:
             from ..index.incremental import IncrementalIndexer
 
@@ -126,15 +134,47 @@ class ShardedSearchService:
             for shard_id, sub in enumerate(shard_documents(store, n_shards)):
                 self.indexers[shard_id].add_prelemmatized(sub.documents)
             self.commit()
-            return
-        global_freq = store.lemma_frequencies()
-        self.fl = FLList.from_frequencies(global_freq, sw_count=sw_count, fu_count=fu_count)
-        for sub in shard_documents(store, n_shards):
-            # every shard indexes with the GLOBAL FL-list (lemma typing and
-            # canonical key order must agree across shards)
-            idx = build_indexes(sub, sw_count=sw_count, fu_count=fu_count,
-                                max_distance=max_distance, fl=self.fl)
-            self._static_shards.append(idx)
+        else:
+            global_freq = store.lemma_frequencies()
+            self.fl = FLList.from_frequencies(global_freq, sw_count=sw_count, fu_count=fu_count)
+            for sub in shard_documents(store, n_shards):
+                # every shard indexes with the GLOBAL FL-list (lemma typing
+                # and canonical key order must agree across shards)
+                idx = build_indexes(sub, sw_count=sw_count, fu_count=fu_count,
+                                    max_distance=max_distance, fl=self.fl)
+                self._static_shards.append(idx)
+        if resilience is not None or injector is not None:
+            self.enable_resilience(policy=resilience, injector=injector)
+
+    def enable_resilience(self, policy=None, injector=None):
+        """Switch the fan-out onto the §14 failure path (DESIGN.md §14).
+
+        Installs a :class:`~repro.search.resilience.ShardSupervisor`: every
+        ``search_batch`` then runs the probe barrier (circuit breakers,
+        retries/hedges, snapshot recovery) before packing the surviving
+        shards into the usual single fused dispatch.  Idempotent-ish:
+        calling again replaces the supervisor but keeps an existing
+        injector unless a new one is passed.  Returns the supervisor.
+        Fragments are exact-or-flagged either way — the supervisor decides
+        *which shards* serve, never what a shard returns.
+        """
+        from .resilience import FaultInjector, ShardSupervisor
+
+        if injector is not None:
+            self.injector = injector
+        elif self.injector is None:
+            self.injector = FaultInjector()
+        self.supervisor = ShardSupervisor(self, policy=policy, injector=self.injector)
+        if self.arena is not None:
+            self.arena.injector = self.injector
+        return self.supervisor
+
+    def resilience_metrics(self) -> dict:
+        """Supervisor/health/injector counters (DESIGN.md §14) or ``{}``
+        when the resilience layer is off — consumed by the frontend's
+        ``metrics()``, ``launch/serve.py`` reports and the bench gates
+        (which pin the exact zero-counter contract for fault-free runs)."""
+        return {} if self.supervisor is None else self.supervisor.metrics()
 
     @property
     def shards(self) -> list[IndexSet]:
@@ -198,7 +238,15 @@ class ShardedSearchService:
         self.fl = FLList.from_frequencies(
             global_freq, sw_count=self.sw_count, fu_count=self.fu_count
         )
-        reports = [ix.commit(fl=self.fl) for ix in self.indexers]
+        reports = []
+        for i, ix in enumerate(self.indexers):
+            if self.supervisor is not None:
+                # §14 injection point: a crash here leaves a torn commit
+                # (some shards on the new generation, this one not) — the
+                # next batch's probe barrier recovers the crashed shard
+                # from its snapshot under a fresh §12.5 epoch
+                self.supervisor.guard_commit(i)
+            reports.append(ix.commit(fl=self.fl))
         return {
             "new_docs": sum(r["new_docs"] for r in reports),
             "rekeyed_docs": sum(r["rekeyed_docs"] for r in reports),
@@ -262,6 +310,9 @@ class ShardedSearchService:
         manifest_tmp.replace(directory / "service.json")
         for i in range(self.n_shards):
             retain_latest(directory / f"shard_{i:02d}", SNAPSHOT_PREFIX, keep)
+        # remember where durable state lives: the §14 supervisor recovers
+        # crashed shards from here unless its policy pins another root
+        self.last_snapshot_dir = directory
         return directory
 
     @classmethod
@@ -297,6 +348,9 @@ class ShardedSearchService:
         svc.fu_count = m["fu_count"]
         svc.lemmatizer = lemmatizer or Lemmatizer()
         svc._static_shards = []
+        svc.supervisor = None
+        svc.injector = None
+        svc.last_snapshot_dir = directory
         shard_snapshots = m.get("shard_snapshots") or [None] * svc.n_shards
         svc.indexers = [
             IncrementalIndexer.restore(
@@ -317,9 +371,11 @@ class ShardedSearchService:
     ) -> QueryResponse:
         """Fan out to all live shards and tree-merge ranked results.
 
-        ``dead_shards`` simulates pod failures: the service degrades
-        gracefully (documents on dead shards are simply absent — production
-        re-replicates them from the document store at the next epoch).
+        ``dead_shards`` simulates pod failures by holding those shards
+        down in the §14 fault injector for this call (ONE failure path
+        with the detected-failure case): the service degrades gracefully —
+        documents on dead shards are simply absent, the response is
+        flagged degraded, and what it does cover is exactly ranked.
         """
         return self.search_batch([query], top_k=top_k, dead_shards=dead_shards)[0]
 
@@ -335,6 +391,16 @@ class ShardedSearchService:
         cross product packs into ONE device program (``search/fused.py``) —
         the fan-out that used to be a Python triple loop of host Combiner
         calls.  Host algorithms keep the per-subquery loop.
+
+        Liveness comes from the §14 probe barrier when the resilience
+        layer is on (``enable_resilience``): the supervisor detects,
+        retries, hedges and recovers, and the surviving shards still pack
+        into the single fused dispatch.  The legacy ``dead_shards=``
+        argument routes through the same path — it holds those shards down
+        in the :class:`~repro.search.resilience.FaultInjector` for this
+        call, so there is one failure path, not two.  Degraded responses
+        are flagged (``QueryStats.shards_degraded`` / ``partial``) and
+        exactly ranked over the shards they cover.
         """
         import time
 
@@ -342,11 +408,24 @@ class ShardedSearchService:
 
         t0 = time.perf_counter()
         per_query_subs = [expand_subqueries(q, self.lemmatizer) for q in queries]
-        live = [
-            idx
-            for shard_id, idx in enumerate(self.shards)
-            if shard_id not in dead_shards
-        ]
+        dead = frozenset(int(s) for s in dead_shards)
+        if dead and self.supervisor is None:
+            self.enable_resilience()
+        rstats = None
+        if self.supervisor is not None:
+            if dead:
+                self.injector.hold_down(dead)
+            try:
+                rstats = QueryStats()
+                live_ids = self.supervisor.probe_live_shards(rstats)
+            finally:
+                if dead:
+                    self.injector.release(dead)
+            # resolve AFTER the barrier: recovery may have replaced indexers
+            shards = self.shards
+            live = [shards[i] for i in live_ids]
+        else:
+            live = list(self.shards)
         if self.algorithm == "fused":
             responses = self._search_batch_fused(
                 queries, per_query_subs, live, top_k, t0
@@ -356,6 +435,19 @@ class ShardedSearchService:
                 self._search_host(q, subs, live, top_k)
                 for q, subs in zip(queries, per_query_subs)
             ]
+        if rstats is not None and (
+            rstats.shards_degraded or rstats.retries
+            or rstats.hedges or rstats.recoveries
+        ):
+            for resp in responses:
+                st = resp.stats
+                # batch-level, like device_dispatches: one probe barrier
+                st.retries = rstats.retries
+                st.hedges = rstats.hedges
+                st.recoveries = rstats.recoveries
+                st.shards_degraded = rstats.shards_degraded
+                if rstats.shards_degraded:
+                    st.partial = True
         return responses
 
     def _search_host(

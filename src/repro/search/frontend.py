@@ -20,6 +20,15 @@ the three things heavy traffic needs (ROADMAP north star):
   batches then gather/pack on device from descriptors; ``warmup()``
   precompiles the bucketed device programs so cold p99 excludes jit
   compile.  Fragments are identical with the arena on or off.
+* **Resilience** (DESIGN.md §14) — over a source with an enabled
+  ``ShardSupervisor`` (``search/resilience.py``) every slate first runs the
+  shard probe barrier: crashed shards are retried/hedged/recovered before
+  views resolve, and responses that could not cover every shard are flagged
+  (``QueryStats.shards_degraded`` / ``partial``) and exactly ranked over
+  the shards they did cover — never silently wrong.  Opt-in
+  ``max_inflight`` load shedding re-admits overflow misses under
+  ``shed_deadline_sec`` through the same partial machinery (flagged via
+  ``QueryStats.shed``) instead of erroring.
 * **Deadlines** — per-request response-time budgets enforced at *admission*
   (the 2009.03679 approach: bound the work before dispatch, don't abort
   mid-kernel).  Estimated cost is the plan's exact posting counts divided by
@@ -178,9 +187,16 @@ class ServingFrontend:
         compute_dtype: str = "uint8",
         arena_budget_mb: float = 0.0,
         arena=None,
+        max_inflight: int | None = None,
+        shed_deadline_sec: float = 0.0,
     ):
         self._source = source
         self.max_batch = max(1, int(max_batch))
+        # admission-control load shedding (DESIGN.md §14): at most
+        # max_inflight planned misses per slate run at full budget; the
+        # overflow re-admits under shed_deadline_sec -> flagged partial
+        self.max_inflight = max_inflight if max_inflight is None else max(0, int(max_inflight))
+        self.shed_deadline_sec = float(shed_deadline_sec)
         self.default_deadline_sec = default_deadline_sec
         self.postings_per_sec = float(postings_per_sec)
         self.calibrate = calibrate
@@ -211,6 +227,7 @@ class ServingFrontend:
         self._result_misses = 0
         self._partials = 0
         self._served = 0
+        self._sheds = 0
 
     # ---- warm start (DESIGN.md §12.5) ------------------------------------
 
@@ -283,10 +300,26 @@ class ServingFrontend:
             r if isinstance(r, SearchRequest) else SearchRequest(query=r)
             for r in requests
         ]
+        # §14 probe barrier FIRST: recovery replaces shard indexers, so the
+        # generation token and views must resolve after it (a recovered
+        # shard's fresh restore epoch is what strands pre-crash cache keys)
+        supervisor = getattr(self._source, "supervisor", None)
+        rstats = None
+        live_shard_ids: list[int] | None = None
+        if supervisor is not None:
+            rstats = QueryStats()
+            live_shard_ids = supervisor.probe_live_shards(rstats)
         token = generation_token(self._source)
         views, _, max_distance, _ = resolve_index_views(self._source)
+        shard_ids = list(range(len(views)))
+        if live_shard_ids is not None and len(live_shard_ids) < len(views):
+            shard_ids = list(live_shard_ids)
+            views = [views[i] for i in shard_ids]
+        # posting-cache keys carry the TRUE shard id (not the position in
+        # the degraded live list), so a degraded slate can never reuse a
+        # slice cached for a different shard under the same token
         cached_views = [
-            _CachedView(v, self.posting_cache, (token, i))
+            _CachedView(v, self.posting_cache, (token, shard_ids[i]))
             for i, v in enumerate(views)
         ]
 
@@ -295,6 +328,7 @@ class ServingFrontend:
         miss_plans: list[QueryPlan] = []
         miss_admitted: list[list[SubqueryPlan]] = []
         miss_budget: list[float] = []
+        miss_shed: list[bool] = []
         pending: dict[tuple, int] = {}  # (query, top_k) -> first miss index
         aliases: list[tuple[int, int]] = []  # (dup index, first index)
         for i, req in enumerate(reqs):
@@ -328,14 +362,28 @@ class ServingFrontend:
             miss_plans.append(plan)
             miss_admitted.append(admitted)
             miss_budget.append(0.0 if budget is None else float(budget))
+            miss_shed.append(False)
             # stash plan-time accounting to merge into the response stats
             plan._posting_cache_hits = p_hits  # type: ignore[attr-defined]
+
+        # admission-control load shedding (DESIGN.md §14): misses beyond
+        # max_inflight re-admit under the shed budget — they degrade to
+        # flagged, exactly-ranked partial responses instead of erroring or
+        # queueing unboundedly (request order decides who sheds:
+        # deterministic, and earlier requests are older)
+        if self.max_inflight is not None and len(miss_idx) > self.max_inflight:
+            for j in range(self.max_inflight, len(miss_idx)):
+                admitted, _ = self._admit(miss_plans[j], self.shed_deadline_sec)
+                miss_admitted[j] = admitted
+                miss_budget[j] = self.shed_deadline_sec
+                miss_shed[j] = True
+                self._sheds += 1
 
         # arena residencies are acquired only when something will actually
         # execute: a fully cache-served slate must never pay acquire work
         # (a cold acquire re-uploads whole families)
         residencies = (
-            self._acquire_residencies(views, cached_views, token)
+            self._acquire_residencies(views, cached_views, token, shard_ids)
             if miss_idx
             else None
         )
@@ -371,6 +419,18 @@ class ServingFrontend:
                     chunk_plans[j], "_posting_cache_hits", 0
                 )
                 resp.stats.deadline_sec = miss_budget[lo + j]
+                if miss_shed[lo + j]:
+                    resp.stats.shed = 1
+                if rstats is not None:
+                    # batch-level §14 counters; a degraded fan-out flags the
+                    # response partial BEFORE the caching branch below, so a
+                    # response missing shards is never cached as complete
+                    resp.stats.retries = rstats.retries
+                    resp.stats.hedges = rstats.hedges
+                    resp.stats.recoveries = rstats.recoveries
+                    resp.stats.shards_degraded = rstats.shards_degraded
+                    if rstats.shards_degraded:
+                        resp.stats.partial = True
                 self._served += 1
                 if resp.stats.partial:
                     self._partials += 1
@@ -401,7 +461,7 @@ class ServingFrontend:
 
     # ---- internals --------------------------------------------------------
 
-    def _acquire_residencies(self, views, cached_views, token):
+    def _acquire_residencies(self, views, cached_views, token, shard_ids=None):
         """Posting-arena residencies per live shard view (DESIGN.md §13).
 
         Keyed by ``id(cached_view)`` because that is the view object
@@ -409,16 +469,29 @@ class ServingFrontend:
         (the arena walks family dicts, which the cache wrapper does not
         carry).  A sharded source's tuple token splits into per-shard
         tokens, so one shard's commit only invalidates its own buffers.
+        ``shard_ids`` maps each live view to its TRUE shard id — under a
+        §14-degraded fan-out positions shift, but tokens and arena keys
+        must keep naming the same shard exactly.
         """
         if self.arena is None:
             return None
+        if shard_ids is None:
+            shard_ids = list(range(len(views)))
+        if self.arena.injector is None:
+            # share the source's §14 fault injector (if resilience is on)
+            self.arena.injector = getattr(self._source, "injector", None)
+        # the token is a per-shard tuple exactly when the source is the
+        # sharded service (a lone restored indexer's (epoch, mutations)
+        # tuple must NOT be split)
+        n_shards = getattr(self._source, "n_shards", None)
         per_shard = (
-            token
-            if isinstance(token, tuple) and len(token) == len(views)
+            [token[s] for s in shard_ids]
+            if isinstance(token, tuple) and n_shards is not None
+            and len(token) == n_shards
             else [token] * len(views)
         )
         all_res = self.arena.acquire_many(
-            [(raw, per_shard[i], i) for i, raw in enumerate(views)]
+            [(raw, per_shard[i], shard_ids[i]) for i, raw in enumerate(views)]
         )
         return {id(cached): res for cached, res in zip(cached_views, all_res)}
 
@@ -579,4 +652,11 @@ class ServingFrontend:
             "posting_cache_entries": len(self.posting_cache),
             "partial_responses": self._partials,
             "postings_per_sec_estimate": self.postings_per_sec,
+            "sheds": self._sheds,
+            # §14 resilience counters (empty dict when the layer is off)
+            "resilience": (
+                self._source.resilience_metrics()
+                if hasattr(self._source, "resilience_metrics")
+                else {}
+            ),
         }

@@ -1,0 +1,401 @@
+"""Chaos-differential harness for the §14 resilient serving layer.
+
+The headline invariant of DESIGN.md §14, run over the strategies corpora
+under seeded fault schedules (the CI ``chaos`` step pins three distinct
+seeds): under ANY injected fault sequence — shard crashes and kills,
+straggler delays, snapshot bit-flips, arena pressure — every served
+response is either
+
+* **exact**: fragment-identical to the SE2.4 oracle over the full corpus
+  (``repro.core.oracle``), with every resilience counter zero; or
+* **flagged partial**: ``QueryStats.shards_degraded > 0`` / ``partial``,
+  fragment-identical to the oracle minus exactly the excluded shards'
+  documents, and ranked exactly as ``rank_documents`` over what it covers.
+
+Never silently wrong.  Recovery restores byte-identical shard state
+(``index_sets_equal`` vs an uncrashed replica of the snapshot) under a
+fresh §12.5 epoch, and the whole schedule replays deterministically from
+its seed.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from tests.strategies import make_corpus, make_queries
+
+from repro.core.keys import expand_subqueries, select_keys
+from repro.core.oracle import oracle_search
+from repro.core.postings import SearchResult
+from repro.index import DocumentStore, build_indexes
+from repro.index.incremental import index_sets_equal
+from repro.runtime.fault_tolerance import RestartPolicy
+from repro.search.arena import PostingArena
+from repro.search.distributed import ShardedSearchService
+from repro.search.frontend import SearchRequest, ServingFrontend
+from repro.search.relevance import rank_documents
+from repro.search.resilience import (
+    FaultEvent,
+    FaultInjector,
+    ResiliencePolicy,
+    ShardCrash,
+)
+
+# the three fault-schedule seeds the acceptance gate (and CI) replay
+CHAOS_SEEDS = (101, 202, 303)
+N_SHARDS = 3
+CORPUS_SEED = 17
+TOP_K = 1000  # >= any corpus size here: responses carry every ranked doc
+
+
+def _frag_set(results):
+    return {(r.doc_id, r.start, r.end) for r in results}
+
+
+def _response_frags(resp):
+    return {(d.doc_id, f.start, f.end) for d in resp.docs for f in d.fragments}
+
+
+def _oracle_union(query, index, lemmatizer):
+    union = set()
+    for sub in expand_subqueries(query, lemmatizer):
+        keys = select_keys(sub, index.fl)
+        postings = {k: index.key_postings(k.components) for k in keys}
+        union |= _frag_set(oracle_search(sub, keys, postings, index.max_distance))
+    return union
+
+
+def _ranking(frags, top_k=TOP_K):
+    results = [SearchResult(doc_id=d, start=s, end=e) for d, s, e in frags]
+    return [(doc, score) for doc, score, _ in rank_documents(results, top_k=top_k)]
+
+
+def _fast_policy(**kw):
+    kw.setdefault("restart", RestartPolicy(max_restarts=2, min_backoff_s=0.0))
+    kw.setdefault("breaker_cooldown_s", 0.0)
+    return ResiliencePolicy(**kw)
+
+
+def _build_stack(tmp_path, chaos_seed=None, snapshot=True, **policy_kw):
+    spec = make_corpus(CORPUS_SEED, max_docs=10)
+    store = DocumentStore.from_texts(spec.texts)
+    full_index = build_indexes(
+        store,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+    )
+    queries = make_queries(CORPUS_SEED, spec, n_queries=5)
+    oracles = {q: _oracle_union(q, full_index, store.lemmatizer) for q in queries}
+    svc = ShardedSearchService(
+        store,
+        n_shards=N_SHARDS,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+        algorithm="fused",
+        incremental=True,
+    )
+    if snapshot:
+        svc.snapshot(tmp_path / "snap")
+    injector = (
+        FaultInjector.from_seed(chaos_seed, n_shards=N_SHARDS)
+        if chaos_seed is not None
+        else None
+    )
+    svc.enable_resilience(policy=_fast_policy(**policy_kw), injector=injector)
+    return svc, queries, oracles
+
+
+def _assert_exact_or_flagged(svc, resp, oracle):
+    """The §14 invariant for one response (see module docstring)."""
+    got = _response_frags(resp)
+    if resp.stats.shards_degraded == 0:
+        assert not resp.stats.partial, resp.query
+        assert got == oracle, (resp.query, "exact path diverged from oracle")
+    else:
+        assert resp.stats.partial, resp.query
+        dead = svc.supervisor.last_excluded
+        expected = {f for f in oracle if f[0] % N_SHARDS not in dead}
+        assert got == expected, (resp.query, sorted(dead), "degraded coverage")
+        assert [(d.doc_id, d.score) for d in resp.docs] == _ranking(expected), (
+            resp.query,
+            "degraded ranking is not the exact ranking of the covered set",
+        )
+
+
+# ---------------------------------------------------------------------------
+# the headline chaos-differential gate (3 seeds, multiple serving rounds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chaos_seed", CHAOS_SEEDS)
+def test_chaos_differential_exact_or_flagged(chaos_seed, tmp_path):
+    svc, queries, oracles = _build_stack(tmp_path, chaos_seed=chaos_seed)
+    saw_fault = False
+    # 12 rounds = 12 probe arrivals per shard, past every at_call a seeded
+    # schedule can draw (max 9) — the kill event is guaranteed to fire
+    for _round in range(12):
+        for q, resp in zip(queries, svc.search_batch(queries, top_k=TOP_K)):
+            saw_fault = saw_fault or bool(
+                resp.stats.shards_degraded
+                or resp.stats.retries
+                or resp.stats.recoveries
+            )
+            _assert_exact_or_flagged(svc, resp, oracles[q])
+    # the seeded schedules are built to actually exercise the failure path
+    assert saw_fault and svc.injector.log, "schedule fired no faults"
+
+
+@pytest.mark.parametrize("chaos_seed", CHAOS_SEEDS)
+def test_chaos_differential_through_frontend(chaos_seed, tmp_path):
+    """Same invariant served through the planner/frontend layer: cache hits
+    are exact complete responses, misses are exact-or-flagged, and partial
+    (degraded/shed) responses are never cached."""
+    svc, queries, oracles = _build_stack(tmp_path, chaos_seed=chaos_seed)
+    frontend = ServingFrontend(svc)
+    for _round in range(4):
+        reqs = [SearchRequest(q, top_k=TOP_K) for q in queries]
+        for q, resp in zip(queries, frontend.search_many(reqs)):
+            if resp.stats.cache_hits:
+                # cached => was complete and exact when all shards served
+                assert _response_frags(resp) == oracles[q], (q, "stale cache")
+            else:
+                _assert_exact_or_flagged(svc, resp, oracles[q])
+
+
+def test_chaos_schedule_replays_deterministically(tmp_path):
+    """One seed, two runs: identical fired-event logs, identical responses
+    round by round — the property the CI gate depends on."""
+
+    def run(subdir):
+        svc, queries, _ = _build_stack(tmp_path / subdir, chaos_seed=CHAOS_SEEDS[0])
+        trace = []
+        for _round in range(5):
+            for resp in svc.search_batch(queries, top_k=TOP_K):
+                trace.append(
+                    (
+                        sorted(_response_frags(resp)),
+                        resp.stats.shards_degraded,
+                        resp.stats.retries,
+                        resp.stats.recoveries,
+                    )
+                )
+        log = [(e["point"], e["kind"], e.get("shard")) for e in svc.injector.log]
+        return trace, log
+
+    trace_a, log_a = run("a")
+    trace_b, log_b = run("b")
+    assert log_a == log_b
+    assert trace_a == trace_b
+
+
+# ---------------------------------------------------------------------------
+# recovery: byte-identical state under a fresh §12.5 epoch
+# ---------------------------------------------------------------------------
+
+
+def test_recovery_restores_byte_identical_state(tmp_path):
+    svc, queries, oracles = _build_stack(tmp_path)
+    # an uncrashed replica of the same snapshot lineage
+    replica = ShardedSearchService.restore(tmp_path / "snap")
+    victim = 1
+    pre_epoch = svc.indexers[victim]._restore_epoch
+    svc.injector.schedule = (
+        FaultEvent("shard.search", "kill", shard=victim, at_call=0),
+    )
+    resp = svc.search_batch(queries[:1], top_k=TOP_K)[0]
+    assert resp.stats.recoveries == 1 and resp.stats.shards_degraded == 0
+    _assert_exact_or_flagged(svc, resp, oracles[queries[0]])
+    eq, why = index_sets_equal(
+        svc.indexers[victim].index.to_index_set(),
+        replica.indexers[victim].index.to_index_set(),
+    )
+    assert eq, f"recovered shard != uncrashed replica: {why}"
+    # fresh epoch, distinct from the pre-crash boot AND the sibling replica
+    assert svc.indexers[victim]._restore_epoch > pre_epoch
+    assert (
+        svc.indexers[victim]._restore_epoch
+        != replica.indexers[victim]._restore_epoch
+    )
+
+
+def test_corrupt_latest_snapshot_falls_back_to_older(tmp_path):
+    """A bit-flipped newest snapshot fails the store's CRC verify for real;
+    recovery walks back and restores the older snapshot exactly."""
+    svc, queries, oracles = _build_stack(tmp_path)
+    svc.commit()  # bump generation, then snapshot again -> snap_0 + snap_1
+    svc.snapshot(tmp_path / "snap")
+    svc.injector.schedule = (
+        FaultEvent("shard.search", "kill", shard=2, at_call=0),
+        FaultEvent("store.load_snapshot", "bitflip", at_call=0, param=0.5),
+    )
+    resp = svc.search_batch(queries[:1], top_k=TOP_K)[0]
+    kinds = [e["kind"] for e in svc.injector.log]
+    assert "bitflip" in kinds, "schedule never corrupted a snapshot"
+    assert resp.stats.recoveries == 1 and resp.stats.shards_degraded == 0
+    _assert_exact_or_flagged(svc, resp, oracles[queries[0]])
+
+
+def test_unrecoverable_shard_degrades_gracefully(tmp_path):
+    """Every restore candidate corrupt -> the shard stays down and every
+    response is flagged with exact coverage of the surviving shards."""
+    svc, queries, oracles = _build_stack(tmp_path)
+    svc.injector.schedule = (
+        FaultEvent("shard.search", "kill", shard=0, at_call=0),
+        # corrupt EVERY restore attempt, not just the first
+        FaultEvent("store.load_snapshot", "bitflip", at_call=0, count=50, param=0.3),
+    )
+    for _round in range(3):
+        for q, resp in zip(queries, svc.search_batch(queries, top_k=TOP_K)):
+            assert resp.stats.shards_degraded == 1 and resp.stats.partial
+            assert resp.stats.recoveries == 0
+            _assert_exact_or_flagged(svc, resp, oracles[q])
+    assert svc.supervisor.recoveries == 0
+    assert svc.supervisor.health.errors[0] > 0
+
+
+# ---------------------------------------------------------------------------
+# transient faults: retries, hedging, arena pressure
+# ---------------------------------------------------------------------------
+
+
+def test_transient_crash_retries_then_serves_exact(tmp_path):
+    svc, queries, oracles = _build_stack(tmp_path)
+    svc.injector.schedule = (
+        FaultEvent("shard.search", "crash", shard=1, at_call=0, count=1),
+    )
+    resp = svc.search_batch(queries[:1], top_k=TOP_K)[0]
+    assert resp.stats.retries == 1 and resp.stats.shards_degraded == 0
+    assert not resp.stats.partial
+    assert _response_frags(resp) == oracles[queries[0]]
+
+
+def test_straggler_hedge_keeps_shard_and_exactness(tmp_path):
+    svc, queries, oracles = _build_stack(
+        tmp_path, snapshot=False, hedge_after_s=0.02
+    )
+    svc.injector.schedule = (
+        FaultEvent("shard.straggler", "delay", shard=2, at_call=0, delay_s=0.2),
+    )
+    resp = svc.search_batch(queries[:1], top_k=TOP_K)[0]
+    assert resp.stats.hedges == 1 and resp.stats.shards_degraded == 0
+    assert _response_frags(resp) == oracles[queries[0]]
+    # the slow probe still landed in the latency window for MAD detection
+    assert svc.supervisor.health.probes > 0
+
+
+def test_arena_pressure_falls_back_to_host_exactly(tmp_path):
+    spec = make_corpus(CORPUS_SEED, max_docs=10)
+    store = DocumentStore.from_texts(spec.texts)
+    kw = dict(
+        n_shards=N_SHARDS,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+        algorithm="fused",
+        incremental=True,
+    )
+    baseline = ShardedSearchService(store, **kw)
+    queries = make_queries(CORPUS_SEED, spec, n_queries=3)
+    want = [_response_frags(r) for r in baseline.search_batch(queries, top_k=TOP_K)]
+
+    arena = PostingArena(budget_bytes=32 << 20)
+    svc = ShardedSearchService(store, arena=arena, **kw)
+    svc.enable_resilience(
+        policy=_fast_policy(),
+        injector=FaultInjector(
+            schedule=[FaultEvent("arena.acquire", "overflow", at_call=0, count=1)]
+        ),
+    )
+    # round 1 under injected pressure (host fallback), round 2 resident
+    for _round in range(2):
+        got = [_response_frags(r) for r in svc.search_batch(queries, top_k=TOP_K)]
+        assert got == want, "arena pressure changed fragments"
+    assert arena.pressure_events == 1
+
+
+# ---------------------------------------------------------------------------
+# fault-free traffic: every resilience counter stays zero
+# ---------------------------------------------------------------------------
+
+
+def test_fault_free_traffic_leaves_counters_zero(tmp_path):
+    svc, queries, oracles = _build_stack(tmp_path)  # empty schedule
+    frontend = ServingFrontend(svc, max_inflight=None)
+    for _round in range(2):
+        for resp in svc.search_batch(queries, top_k=TOP_K):
+            st = resp.stats
+            assert (
+                st.retries,
+                st.hedges,
+                st.shards_degraded,
+                st.recoveries,
+                st.shed,
+            ) == (0, 0, 0, 0, 0)
+            assert not st.partial
+        for resp in frontend.search_many(queries):
+            st = resp.stats
+            assert (
+                st.retries,
+                st.hedges,
+                st.shards_degraded,
+                st.recoveries,
+                st.shed,
+            ) == (0, 0, 0, 0, 0)
+    m = frontend.metrics()
+    assert m["sheds"] == 0
+    assert m["resilience"]["recoveries"] == 0
+    assert m["resilience"]["fired"] == 0
+    assert all(s == "closed" for s in m["resilience"]["breaker_states"])
+
+
+def test_load_shedding_is_flagged_and_exactly_ranked(tmp_path):
+    """Overflow misses shed to the admission budget: flagged via
+    ``QueryStats.shed``, partial when work was dropped, and what they do
+    return ranks exactly (the PR 3 partial contract)."""
+    svc, queries, oracles = _build_stack(tmp_path)
+    frontend = ServingFrontend(svc, max_inflight=1, shed_deadline_sec=0.0)
+    # duplicates coalesce instead of missing, so shed over unique queries
+    unique = list(dict.fromkeys(queries))
+    assert len(unique) >= 2, "corpus seed produced a single unique query"
+    reqs = [SearchRequest(q, top_k=TOP_K) for q in unique]
+    out = frontend.search_many(reqs)
+    assert [r.stats.shed for r in out] == [0] + [1] * (len(unique) - 1)
+    for q, resp in zip(unique[1:], out[1:]):
+        assert resp.stats.cache_hits == 0
+        assert resp.docs == []  # zero budget admits nothing: empty partial
+        if oracles[q]:
+            # real work was dropped -> must be flagged partial; a query
+            # with nothing executable sheds to an exact empty response
+            assert resp.stats.partial
+    # the unshedded request is exact
+    assert _response_frags(out[0]) == oracles[unique[0]]
+    assert frontend.metrics()["sheds"] == len(unique) - 1
+    # shed PARTIAL responses (real work dropped) were not cached: a
+    # re-serve misses again — and, no longer over the inflight cap, now
+    # executes fully and returns the exact result
+    dropped = [
+        (i, q) for i, q in enumerate(unique) if i > 0 and oracles[q]
+    ]
+    if dropped:
+        i, q = dropped[0]
+        again = frontend.search_many([reqs[i]])[0]
+        assert again.stats.cache_hits == 0 and again.stats.shed == 0
+        assert _response_frags(again) == oracles[q]
+
+
+def test_legacy_dead_shards_routes_through_injector(tmp_path):
+    """The ``dead_shards=`` argument is the same failure path as detection:
+    held shards fail probes, responses are flagged and exactly ranked, and
+    the hold is scoped to the call (the next call serves all shards)."""
+    svc, queries, oracles = _build_stack(tmp_path, snapshot=False)
+    q = queries[0]
+    resp = svc.search_batch([q], top_k=TOP_K, dead_shards=(1,))[0]
+    assert resp.stats.shards_degraded == 1 and resp.stats.partial
+    assert svc.supervisor.last_excluded == frozenset({1})
+    _assert_exact_or_flagged(svc, resp, oracles[q])
+    assert not svc.injector.is_down(1), "hold must not outlive the call"
+    clean = svc.search_batch([q], top_k=TOP_K)[0]
+    assert clean.stats.shards_degraded == 0
+    assert _response_frags(clean) == oracles[q]

@@ -309,3 +309,56 @@ def test_posting_cache_lru_eviction():
     # an oversized slice is never cached
     cache.put(("g", 0, "huge"), np.zeros(1000, np.int32))
     assert cache.get(("g", 0, "huge")) is None
+
+
+def test_result_cache_invalidated_across_crash_recovery(tmp_path):
+    """A crash + snapshot recovery replaces a shard's indexer under a fresh
+    §12.5 restore epoch, which changes the service generation token — so
+    every result cached before the crash must MISS afterwards (a stale hit
+    could serve pre-crash state the recovered shard no longer has), while
+    the re-served fragments stay identical to the pre-crash ones when the
+    recovered state equals the snapshotted state (DESIGN.md §14)."""
+    from repro.runtime.fault_tolerance import RestartPolicy
+    from repro.search.resilience import FaultEvent, ResiliencePolicy
+
+    spec = make_corpus(11, max_docs=10)
+    store = DocumentStore.from_texts(spec.texts)
+    svc = ShardedSearchService(
+        store,
+        n_shards=2,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+        algorithm="fused",
+        incremental=True,
+    )
+    svc.snapshot(tmp_path / "snap")
+    svc.enable_resilience(policy=ResiliencePolicy(
+        restart=RestartPolicy(max_restarts=1, min_backoff_s=0.0),
+        breaker_cooldown_s=0.0,
+    ))
+    frontend = ServingFrontend(svc)
+    queries = make_queries(11, spec, n_queries=3)
+
+    before = frontend.search_many([SearchRequest(q, top_k=1000) for q in queries])
+    token_before = svc.generation_token
+    hits = frontend.search_many([SearchRequest(q, top_k=1000) for q in queries])
+    assert all(r.stats.cache_hits == 1 for r in hits)
+
+    # kill shard 1; the next slate's probe barrier recovers it in place
+    svc.injector.schedule = (
+        FaultEvent("shard.search", "kill", shard=1, at_call=2),
+    )
+    after = frontend.search_many([SearchRequest(q, top_k=1000) for q in queries])
+    assert svc.supervisor.recoveries == 1
+    assert svc.generation_token != token_before  # fresh epoch on shard 1
+    for b, a in zip(before, after):
+        # every pre-crash entry is stranded by the token change: a MISS,
+        # not a stale hit ...
+        assert a.stats.cache_hits == 0 and a.stats.cache_misses == 1
+        assert a.stats.recoveries == 1 and a.stats.shards_degraded == 0
+        # ... and the recovered state serves the identical fragments
+        assert _response_frags(a) == _response_frags(b)
+    # the post-recovery entries cached normally under the new token
+    warm = frontend.search_many([SearchRequest(q, top_k=1000) for q in queries])
+    assert all(r.stats.cache_hits == 1 for r in warm)

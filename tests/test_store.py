@@ -348,3 +348,71 @@ def test_frontend_warm_start_from_snapshot(tmp_path):
     assert _frags(warm_svc.search("who are you", top_k=8)) == _frags(
         ServingFrontend(svc).search("who are you", top_k=8)
     )
+
+
+def test_crash_mid_commit_recovers_under_fresh_epoch(tmp_path):
+    """A shard killed mid-``commit`` leaves a torn generation (siblings
+    committed, the victim not).  The next batch's §14 probe barrier must
+    recover the victim from its snapshot under a DISTINCT §12.5 epoch, so
+    no token minted before the crash can ever alias the recovered state —
+    and a second crash/recovery claims yet another epoch (DESIGN.md §14)."""
+    from repro.index import DocumentStore
+    from repro.runtime.fault_tolerance import RestartPolicy
+    from repro.search.distributed import ShardedSearchService
+    from repro.search.resilience import (
+        FaultEvent,
+        ResiliencePolicy,
+        ShardCrash,
+    )
+
+    store = DocumentStore.from_texts(
+        list(PAPER_EXAMPLE_DOCS) + ["to be or not to be"]
+    )
+    svc = ShardedSearchService(store, n_shards=2, sw_count=10, fu_count=5,
+                               incremental=True)
+    svc.snapshot(tmp_path)
+    svc.enable_resilience(policy=ResiliencePolicy(
+        restart=RestartPolicy(max_restarts=1, min_backoff_s=0.0),
+        breaker_cooldown_s=0.0,
+    ))
+    seen_tokens = {svc.generation_token}
+    svc.injector.schedule = (
+        FaultEvent("shard.commit", "kill", shard=1, at_call=0),
+    )
+    svc.add_documents(["freshly added words", "more new words after that"])
+    with pytest.raises(ShardCrash):
+        svc.commit()
+    # torn state: shard 0 committed the new generation, shard 1 is down
+    assert svc.injector.is_down(1)
+    seen_tokens.add(svc.generation_token)
+
+    resp = svc.search("who are you", top_k=16)
+    st = resp.stats
+    assert st.recoveries == 1 and st.shards_degraded == 0 and not st.partial
+    assert not svc.injector.is_down(1)
+    # the recovered shard resumed from the snapshot under a fresh epoch:
+    # its token is an (epoch, mutations) tuple no pre-crash token equals
+    epoch_1 = svc.indexers[1]._restore_epoch
+    assert epoch_1 >= 1
+    assert isinstance(svc.indexers[1].generation_token, tuple)
+    assert svc.generation_token not in seen_tokens
+    seen_tokens.add(svc.generation_token)
+
+    # a second crash + recovery of the SAME lineage claims a HIGHER epoch
+    # (the persisted §12.5 counter): sibling boots can never mint colliding
+    # tokens even when their mutation counters realign
+    svc.injector.schedule = (
+        FaultEvent("shard.commit", "kill", shard=1, at_call=1),
+    )
+    svc.add_documents(["another doc for the second torn commit"])
+    with pytest.raises(ShardCrash):
+        svc.commit()
+    resp = svc.search("who are you", top_k=16)
+    assert resp.stats.recoveries == 1
+    assert svc.indexers[1]._restore_epoch > epoch_1
+    assert svc.generation_token not in seen_tokens
+    # after recovery the commit path works again end to end
+    svc.injector.schedule = ()
+    svc.add_documents(["a final committed document"])
+    svc.commit()
+    assert svc.generation_token not in seen_tokens
