@@ -253,13 +253,16 @@ def bench_serving(n_queries=8, subs_per_query=2, repeats=3):
     for _ in range(repeats):
         t0 = time.perf_counter()
         res, _ = eng.search_query_batch(batch)
-        fused_results = sum(len(r) for r in res.per_query)
+        # offset arithmetic — counting must not force the §15.1 lazy
+        # SearchResult materialization inside the timed region
+        fused_results = sum(res.n_results(qi) for qi in range(n_queries))
         fused_rounds.append(time.perf_counter() - t0)
     fused_us = 1e6 * min(fused_rounds) / n_queries
     dispatches = fused.dispatch_count() / repeats
 
-    # phase attribution (DESIGN.md §13.5): one instrumented pass splits the
-    # batch into plan / pack / H2D / dispatch / readout µs
+    # phase attribution (DESIGN.md §15.3): one instrumented pass splits the
+    # batch into plan / pack / H2D / dispatch / compute / readout µs —
+    # disjoint brackets that sum to the serial batch wall time
     phases: dict = {}
     prev = fused.collect_phases(phases)
     eng.search_query_batch(batch)
@@ -275,9 +278,18 @@ def bench_serving(n_queries=8, subs_per_query=2, repeats=3):
             "results": fused_results,
             "device_dispatches_per_batch": dispatches,
             "phases_us_per_batch": phases_us,
+            "readout_fraction": readout_fraction(phases_us),
         },
         "speedup": seed_us / max(fused_us, 1e-9),
     }
+
+
+def readout_fraction(phases_us: dict) -> float:
+    """Share of one batch's phase-bracketed wall time spent in host readout
+    (DESIGN.md §15.3) — the §15.1 device-side assembly keeps this under 10%
+    (``readout_fraction_GATE`` in ``benchmarks/run.py``)."""
+    total = sum(phases_us.values())
+    return phases_us.get("readout_us", 0.0) / total if total > 0 else 0.0
 
 
 def bench_serving_results_match(serving: dict) -> bool:
@@ -350,12 +362,14 @@ def bench_arena(quick=False, n_queries=8, subs_per_query=2, repeats=5):
         prev = fused.collect_phases(phases)
         fused.serve_query_batch(work, max_distance=idx.max_distance, **kwargs)
         fused.collect_phases(prev)
+        phases_us = {k: sum(v) for k, v in phases.items()}
         out[name] = {
             "us_per_query": 1e6 * min(rounds) / n_queries,
             "results": sum(len(p) for p in result.per_query),
             "fragments": [sorted((r.doc_id, r.start, r.end) for r in p)
                           for p in result.per_query],
-            "phases_us_per_batch": {k: sum(v) for k, v in phases.items()},
+            "phases_us_per_batch": phases_us,
+            "readout_fraction": readout_fraction(phases_us),
         }
 
     stats = QueryStats()
@@ -400,6 +414,153 @@ def bench_arena(quick=False, n_queries=8, subs_per_query=2, repeats=5):
             "h2d_bytes_per_batch": stats.h2d_bytes,
         },
     }
+
+
+# ---------------------------------------------------------------------------
+# §15.2 pipelined dispatch + §15.4 serving-program roofline
+# ---------------------------------------------------------------------------
+
+
+def bench_overlap(n_queries=16, max_batch=4, repeats=3):
+    """Two-deep pipelined micro-batch loop vs the serial submit→finish loop
+    (DESIGN.md §15.2).
+
+    The same request slate runs through ``search_many`` on fresh frontends
+    with ``pipeline=True`` (batch N+1's plan/pack/H2D overlaps batch N's
+    device compute) and ``pipeline=False`` (each chunk fully finished before
+    the next is planned).  Reports best-of-``repeats`` µs per query for both
+    modes, the overlap speedup, and the response-equality verdict — the two
+    drivers must produce byte-identical responses in admission order
+    (``overlap_results_MISMATCH`` gates ``benchmarks/run.py``).
+    """
+    from repro.search.frontend import SearchRequest, ServingFrontend
+
+    store, idx = build_benchmark_index()
+    subs = _stop_lemma_queries(store, idx, n_queries=n_queries * 2, seed=11)
+    queries = list(dict.fromkeys(" ".join(s.lemmas) for s in subs))[:n_queries]
+    requests = [SearchRequest(q, top_k=16) for q in queries]
+
+    def run(pipeline):
+        # jit-warm on a throwaway frontend; timed rounds use fresh frontends
+        # so result/posting caches are cold and only the loop shape differs
+        ServingFrontend(
+            idx, lemmatizer=store.lemmatizer, max_batch=max_batch,
+            pipeline=pipeline,
+        ).search_many(requests)
+        best = None
+        responses = None
+        for _ in range(repeats):
+            fe = ServingFrontend(
+                idx, lemmatizer=store.lemmatizer, max_batch=max_batch,
+                pipeline=pipeline,
+            )
+            t0 = time.perf_counter()
+            responses = fe.search_many(requests)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        return best, responses
+
+    serial_sec, serial_resp = run(False)
+    pipe_sec, pipe_resp = run(True)
+
+    def key(resp):
+        return [
+            (d.doc_id, d.score, tuple((f.start, f.end) for f in d.fragments))
+            for d in resp.docs
+        ]
+
+    match = len(serial_resp) == len(pipe_resp) and all(
+        key(a) == key(b) for a, b in zip(serial_resp, pipe_resp)
+    )
+    return {
+        "n_queries": len(queries),
+        "max_batch": max_batch,
+        "serial_us_per_query": 1e6 * serial_sec / len(queries),
+        "pipelined_us_per_query": 1e6 * pipe_sec / len(queries),
+        "overlap_speedup": serial_sec / max(pipe_sec, 1e-9),
+        "results_match": bool(match),
+    }
+
+
+def bench_roofline(n_queries=8, subs_per_query=2, out_dir="artifacts/serving_hlo"):
+    """Compiled-program roofline for the serving device programs (DESIGN.md
+    §15.4).
+
+    Lowers the EXACT fused and arena programs a representative batch would
+    dispatch (``lower_query_batch`` / ``lower_arena_batch``), compiles them,
+    and feeds the optimized HLO to ``launch/hlo_analysis.analyze_hlo`` →
+    ``benchmarks/roofline.program_roofline``.  The HLO text is written under
+    ``out_dir`` (shipped as a CI artifact) so an intensity drop against the
+    committed baseline can be diffed down to the instruction.  Serving is
+    expected to sit deep on the memory-bound side of the ridge — a dominant
+    ``compute`` term or an hbm_bytes spike flags an accidental dense
+    materialization.
+    """
+    import gc
+    from pathlib import Path
+
+    from repro.core.keys import select_keys
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.search import fused
+    from repro.search.arena import (
+        PostingArena,
+        lower_arena_batch,
+        plan_arena_batch,
+    )
+
+    from benchmarks.roofline import program_roofline
+
+    store, idx = build_benchmark_index()
+    subs = _stop_lemma_queries(
+        store, idx, n_queries=n_queries * subs_per_query, seed=5
+    )
+    work = [
+        [(s, idx) for s in subs[i * subs_per_query : (i + 1) * subs_per_query]]
+        for i in range(n_queries)
+    ]
+
+    path = Path(out_dir)
+    path.mkdir(parents=True, exist_ok=True)
+    out = {"n_queries": n_queries, "hlo_dir": str(path)}
+
+    plan = fused.plan_query_batch(work)
+    hlo = (
+        fused.lower_query_batch(plan, max_distance=idx.max_distance)
+        .compile()
+        .as_text()
+    )
+    (path / "fused_serve_batch.hlo.txt").write_text(hlo)
+    out["fused"] = program_roofline(analyze_hlo(hlo))
+
+    # arena program: resolve every key against a resident arena, mirroring
+    # serve_query_batch's routing (provably-empty items short-circuit)
+    arena = PostingArena(budget_bytes=1 << 30)
+    res = arena.acquire(idx, 0)
+    items = []
+    for qi, q_items in enumerate(work):
+        for sub, view in q_items:
+            keys = select_keys(sub, view.fl)
+            extents = [res.lookup(k.components) for k in keys]
+            if not keys or any(e is None for e in extents):
+                continue
+            if all(e.n_rows == 0 for e in extents) or (
+                len(keys) >= 2 and any(e.n_rows == 0 for e in extents)
+            ):
+                continue
+            items.append((qi, sub, keys, extents, res))
+    aplan = plan_arena_batch(items, n_queries=len(work))
+    if aplan is not None:
+        hlo = (
+            lower_arena_batch(aplan, max_distance=idx.max_distance)
+            .compile()
+            .as_text()
+        )
+        (path / "arena_serve_batch.hlo.txt").write_text(hlo)
+        out["arena"] = program_roofline(analyze_hlo(hlo))
+    arena.release()
+    del res
+    gc.collect()
+    return out
 
 
 # ---------------------------------------------------------------------------

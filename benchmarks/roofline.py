@@ -1,4 +1,5 @@
-"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline)
+and over the compiled SERVING programs (DESIGN.md §15.4).
 
 Three terms per (arch x shape x mesh), all in seconds-per-step, from the
 compiled HLO (per-device numbers; see launch/hlo_analysis.py):
@@ -13,6 +14,13 @@ The step's lower-bound time is max(terms); the dominant term is the
 bottleneck; roofline fraction = compute / max(terms) (how much of the
 machine's FLOP roof the step can possibly use).  MODEL_FLOPS / HLO_FLOPS
 shows how much of the compiled compute is "useful" (remat/dispatch waste).
+
+:func:`program_roofline` applies the same terms to ONE compiled serving
+program — ``fused_serve_batch`` / ``arena_serve_batch`` lowered and
+analyzed by ``launch/hlo_analysis.analyze_hlo`` — so BENCH_serving.json
+reports how far from memory-bound the device side of a batch runs
+(``benchmarks/paper_tables.bench_roofline`` wires it; the HLO text ships
+as a CI artifact).
 """
 
 from __future__ import annotations
@@ -25,7 +33,46 @@ PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s
 LINK_BW = 50e9  # B/s per ICI link
 
-__all__ = ["load_records", "roofline_terms", "roofline_table", "main"]
+__all__ = [
+    "load_records",
+    "program_roofline",
+    "roofline_terms",
+    "roofline_table",
+    "main",
+]
+
+
+def program_roofline(cost) -> dict:
+    """Roofline terms for one compiled serving program (DESIGN.md §15.4).
+
+    ``cost`` is the :class:`~repro.launch.hlo_analysis.HloCost` of the
+    program's partitioned HLO.  Returns the raw totals plus the §Roofline
+    terms; ``arithmetic_intensity`` (flops per HBM byte) against
+    ``ridge_intensity`` (= PEAK_FLOPS / HBM_BW) says how far from
+    memory-bound the program is — serving gathers/sorts are expected to sit
+    deep on the memory side of the ridge, and a *drop* in intensity from
+    the committed baseline flags a regression (an accidental dense
+    materialization shows up as an hbm_bytes spike).
+    """
+    comp = cost.flops / PEAK_FLOPS
+    mem = cost.hbm_bytes / HBM_BW
+    coll = cost.collective_bytes / LINK_BW
+    terms = {"compute_s": comp, "memory_s": mem, "collective_s": coll}
+    bound = max(comp, mem, coll)
+    dominant = max(terms, key=terms.get).replace("_s", "")
+    return {
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "collective_bytes": cost.collective_bytes,
+        "arithmetic_intensity": (
+            cost.flops / cost.hbm_bytes if cost.hbm_bytes else 0.0
+        ),
+        "ridge_intensity": PEAK_FLOPS / HBM_BW,
+        **terms,
+        "dominant": dominant,
+        "roofline_fraction": comp / bound if bound > 0 else 0.0,
+        "step_lower_bound_s": bound,
+    }
 
 
 def load_records(art_dir: str = "artifacts/dryrun", mesh: str = "singlepod") -> list[dict]:

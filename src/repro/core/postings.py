@@ -9,6 +9,7 @@ paper's iterator protocol: ``Next()``, ``Value`` (current record) and ``Key``
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import numpy as np
 
@@ -19,9 +20,16 @@ __all__ = ["KeyIterator", "QueryStats", "SearchResult"]
 _RECORD_BYTES = 4  # int32 per field
 
 
-@dataclass(frozen=True, order=True)
-class SearchResult:
-    """A minimal text fragment containing every subquery lemma (§10.2)."""
+class SearchResult(NamedTuple):
+    """A minimal text fragment containing every subquery lemma (§10.2).
+
+    A ``NamedTuple`` rather than a dataclass so batch readout can
+    materialize thousands of fragments per batch via ``SearchResult._make``
+    without ``__init__``/``__setattr__`` overhead dominating the readout
+    phase (§15.1); field order ``(doc_id, start, end)`` matches both the
+    dense device result-buffer columns and the order-by-(doc, start)
+    contract the merge paths rely on.
+    """
 
     doc_id: int
     start: int

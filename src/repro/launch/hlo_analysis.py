@@ -176,6 +176,11 @@ def _instr_cost(ins: _Instr, symtab: dict[str, str]) -> HloCost:
             (_shape_stats(symtab.get(o, ""))[0] for o in operands[:1]), default=0
         )
         c.flops += max(numel, in_numel)
+    elif op == "sort":
+        # comparison-sort work: n log2(n) compares over all sorted columns
+        # (the serving programs' packed/segmented sorts are their dominant
+        # non-gather compute — charging them keeps the roofline honest)
+        c.flops += numel * max(1.0, float((max(numel, 2) - 1).bit_length()))
     # ---- collectives --------------------------------------------------------
     base = op.replace("-start", "")
     if base in _COLLECTIVES:

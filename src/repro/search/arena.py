@@ -70,7 +70,7 @@ import jax.numpy as jnp
 from ..core.postings import QueryStats, SearchResult
 from ..index.builder import POSTING_WIDTH, IndexSet
 from ..kernels.gather import ARENA_BLOCK, gather_blocks, gather_blocks_ref
-from .fused import bucket_pow2 as _bucket
+from .fused import _assemble_fragments, bucket_pow2 as _bucket
 
 __all__ = [
     "ARENA_BLOCK",
@@ -80,6 +80,7 @@ __all__ = [
     "PostingArena",
     "plan_arena_batch",
     "arena_serve_batch",
+    "lower_arena_batch",
     "run_arena_batch",
 ]
 
@@ -780,10 +781,12 @@ def arena_serve_batch(
     stage 4  §14 scoring + per-query top-k — the same stages as
              ``fused_serve_batch``.
 
-    Returns the per-event ``emit``/``start`` (aligned to the returned
-    sorted ``comp`` stream) plus the row maps the host readout decodes
-    fragments from.  Fragment sets are byte-identical to the host-pack
-    path.
+    Returns the §15.1 dense result buffer ``res`` (sorted unique
+    ``(q, doc, start, end)`` rows plus per-query counts — the device
+    readout's ONE fixed-shape D2H copy) alongside the per-event
+    ``emit``/``start`` (aligned to the returned sorted ``comp`` stream) and
+    the row maps the legacy host readout decodes fragments from.  Fragment
+    sets are byte-identical to the host-pack path.
     """
     nb = (n_budget - 1).bit_length()
     lb = max((lemma_budget - 1).bit_length(), 1)
@@ -964,38 +967,38 @@ def arena_serve_batch(
         .at[jnp.clip(row_query, 0, query_budget - 1)]
         .add(jnp.where(row_query >= 0, frag_per_row, 0))
     )
+
+    # §15.1 device-side result assembly over the deduped event stream —
+    # identical dedup + output order to the fused host pack's buffer
+    ev_q = row_query[row2]
+    ev_d = row_doc[row2]
+    frag_valid = emit_primary & (ev_q >= 0) & (ev_d >= 0)
+    res = _assemble_fragments(ev_q, ev_d, start, pos2, frag_valid, query_budget)
+
     return {
         "emit": emit_primary,
         "start": start,
         "comp": comp,
         "row_doc": row_doc,
         "row_query": row_query,
+        "res": res,
         "top_docs": top_docs,
         "top_scores": top_scores,
         "n_fragments": n_fragments,
     }
 
 
-def run_arena_batch(
-    plan: ArenaBatchPlan,
-    *,
-    max_distance: int,
-    top_k: int = 16,
-    use_kernel: bool = False,
-    interpret: bool = True,
-    stats: QueryStats | None = None,
-    phases: dict | None = None,
-):
-    """Dispatch ONE arena device program and read fragments out (DESIGN.md
-    §13.4).  The readout mirrors ``run_query_batch``: one ``np.nonzero``
-    over the event stream, one ``np.unique`` for the cross-segment dedup.
-    Returns a :class:`~repro.search.fused.FusedBatchResult`; fragment sets
-    are byte-identical to the host-pack path (``tests/test_arena.py``)."""
-    from .fused import FusedBatchResult
+def _device_args(plan: ArenaBatchPlan, use_kernel: bool):
+    """Assemble ONE arena program's device arguments from a plan.
 
-    fams = plan.families
-    groups = range(len(fams))
-    t0 = time.perf_counter()
+    Returns ``(args, h2d_bytes)`` where ``args`` matches the positional
+    signature of :func:`arena_serve_batch` and ``h2d_bytes`` counts the
+    descriptor bytes enqueued host-to-device (the resident posting buffers
+    themselves never move — that's the point of the arena, §13.1).  Shared
+    by :func:`run_arena_batch` and :func:`lower_arena_batch` so the HLO
+    captured for the §15.4 roofline is the program that actually serves.
+    """
+    groups = range(len(plan.families))
     if use_kernel:
         gather_args = tuple(
             (
@@ -1030,15 +1033,21 @@ def run_arena_batch(
         jnp.asarray(plan.seg_query),
     )
     h2d += plan.n_keys.nbytes + plan.mult.nbytes + plan.seg_query.nbytes
-    if stats is not None:
-        stats.h2d_bytes += h2d
-    if phases is not None:
-        jax.block_until_ready(args[1:])
-        phases.setdefault("h2d_us", []).append((time.perf_counter() - t0) * 1e6)
-        t0 = time.perf_counter()
-    out = arena_serve_batch(
-        *args,
-        families=fams,
+    return args, h2d
+
+
+def _static_kwargs(
+    plan: ArenaBatchPlan,
+    *,
+    max_distance: int,
+    top_k: int,
+    use_kernel: bool,
+    interpret: bool,
+) -> dict:
+    """Static (jit-cache-keyed) kwargs of :func:`arena_serve_batch` for a
+    plan — the shape/config half of the program's signature."""
+    return dict(
+        families=plan.families,
         e_budgets=tuple(plan.e_budget),
         block=plan.block,
         max_distance=max_distance,
@@ -1054,46 +1063,146 @@ def run_arena_batch(
         use_kernel=use_kernel,
         interpret=interpret,
     )
+
+
+def lower_arena_batch(
+    plan: ArenaBatchPlan,
+    *,
+    max_distance: int,
+    top_k: int = 16,
+    use_kernel: bool = False,
+    interpret: bool = True,
+):
+    """Lower ONE arena device program WITHOUT dispatching it (DESIGN.md
+    §15.4).  Returns the jax ``Lowered`` object; callers compile it and feed
+    ``.as_text()`` to ``launch/hlo_analysis.analyze_hlo`` for the serving
+    roofline (``benchmarks/paper_tables.bench_roofline``)."""
+    args, _ = _device_args(plan, use_kernel)
+    return arena_serve_batch.lower(
+        *args,
+        **_static_kwargs(
+            plan,
+            max_distance=max_distance,
+            top_k=top_k,
+            use_kernel=use_kernel,
+            interpret=interpret,
+        ),
+    )
+
+
+def run_arena_batch(
+    plan: ArenaBatchPlan,
+    *,
+    max_distance: int,
+    top_k: int = 16,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    stats: QueryStats | None = None,
+    phases: dict | None = None,
+    readout: str = "device",
+    defer: bool = False,
+):
+    """Dispatch ONE arena device program and read results out (DESIGN.md
+    §13.4).  The readout mirrors ``run_query_batch``: ``readout="device"``
+    splits the §15.1 device-assembled result buffer (one fixed-shape D2H
+    copy); ``readout="host"`` keeps the legacy ``np.nonzero`` +
+    two-tier dedup over the event stream as the differential reference.
+    ``defer=True`` returns a :class:`~repro.search.fused.PendingBatch`
+    right after submit (§15.2).  Fragment sets are byte-identical to the
+    host-pack path (``tests/test_arena.py``)."""
+    from .fused import (
+        FusedBatchResult,
+        PendingBatch,
+        _dedup_fragments,
+        _split_result_buffer,
+    )
+
+    if readout not in ("device", "host"):
+        raise ValueError(f"unknown readout mode: {readout!r}")
+    t0 = time.perf_counter()
+    args, h2d = _device_args(plan, use_kernel)
+    if stats is not None:
+        stats.h2d_bytes += h2d
+    # enqueue time only — the premature block_until_ready(args[1:]) that
+    # used to sit here forced a full descriptor H2D sync into the dispatch
+    # window (the fused path's twin of the same bug)
+    if phases is not None:
+        phases.setdefault("h2d_us", []).append((time.perf_counter() - t0) * 1e6)
+        t0 = time.perf_counter()
+    out = arena_serve_batch(
+        *args,
+        **_static_kwargs(
+            plan,
+            max_distance=max_distance,
+            top_k=top_k,
+            use_kernel=use_kernel,
+            interpret=interpret,
+        ),
+    )
     if stats is not None:
         stats.device_dispatches += 1
     if phases is not None:
-        jax.block_until_ready(out)
         phases.setdefault("dispatch_us", []).append((time.perf_counter() - t0) * 1e6)
-        t0 = time.perf_counter()
 
-    nb = (plan.n_budget - 1).bit_length()
-    lb = max((plan.lemma_budget - 1).bit_length(), 1)
-    emit = np.asarray(out["emit"])
-    (hits,) = np.nonzero(emit)
-    comp = np.asarray(out["comp"])[hits].astype(np.int64)
-    starts = np.asarray(out["start"])[hits].astype(np.int64)
-    ends = (comp >> lb) & (plan.n_budget - 1)
-    rows = comp >> (lb + nb)
-    row_doc = np.asarray(out["row_doc"]).astype(np.int64)
-    row_query = np.asarray(out["row_query"]).astype(np.int64)
-    docs = row_doc[rows]
-    q_of = row_query[rows]
     nq = plan.n_queries
-    live = (q_of >= 0) & (q_of < nq)
-    n = plan.n_budget
-    doc_mod = docs.max(initial=0) + 1
-    frag_key = ((q_of * doc_mod + docs) * n + starts) * n + ends
-    uniq = np.unique(frag_key[live])
-    u_end = uniq % n
-    u_start = (uniq // n) % n
-    u_doc = (uniq // (n * n)) % doc_mod
-    u_q = uniq // (n * n * doc_mod)
-    per_query: list[list[SearchResult]] = [[] for _ in range(nq)]
-    for qi, d, st, en in zip(
-        u_q.tolist(), u_doc.tolist(), u_start.tolist(), u_end.tolist()
-    ):
-        per_query[qi].append(SearchResult(doc_id=d, start=st, end=en))
-    result = FusedBatchResult(
-        per_query=per_query,
-        top_docs=np.asarray(out["top_docs"])[:nq],
-        top_scores=np.asarray(out["top_scores"])[:nq],
-        n_fragments=np.asarray(out["n_fragments"])[:nq],
-    )
-    if phases is not None:
-        phases.setdefault("readout_us", []).append((time.perf_counter() - t0) * 1e6)
-    return result
+
+    def finalize():
+        t1 = time.perf_counter()
+        if phases is not None:
+            # bench-only barrier: device time goes to compute_us, not to
+            # whichever phase bracket encloses the first fetch
+            jax.block_until_ready(out)
+            now = time.perf_counter()
+            phases.setdefault("compute_us", []).append((now - t1) * 1e6)
+            t2 = now
+        else:
+            t2 = t1
+        if readout == "device":
+            buf = np.asarray(out["res"])
+            frag_rows, frag_offsets = _split_result_buffer(
+                buf, nq, plan.query_budget
+            )
+            result = FusedBatchResult(
+                frag_rows=frag_rows,
+                frag_offsets=frag_offsets,
+                top_docs=np.asarray(out["top_docs"])[:nq],
+                top_scores=np.asarray(out["top_scores"])[:nq],
+                n_fragments=np.asarray(out["n_fragments"])[:nq],
+            )
+        else:
+            nb = (plan.n_budget - 1).bit_length()
+            lb = max((plan.lemma_budget - 1).bit_length(), 1)
+            emit = np.asarray(out["emit"])
+            (hits,) = np.nonzero(emit)
+            comp = np.asarray(out["comp"])[hits].astype(np.int64)
+            starts = np.asarray(out["start"])[hits].astype(np.int64)
+            ends = (comp >> lb) & (plan.n_budget - 1)
+            rows = comp >> (lb + nb)
+            row_doc = np.asarray(out["row_doc"]).astype(np.int64)
+            row_query = np.asarray(out["row_query"]).astype(np.int64)
+            docs = row_doc[rows]
+            q_of = row_query[rows]
+            live = (q_of >= 0) & (q_of < nq)
+            u_q, u_doc, u_start, u_end = _dedup_fragments(
+                q_of[live], docs[live], starts[live], ends[live]
+            )
+            per_query: list[list[SearchResult]] = [[] for _ in range(nq)]
+            for qi, d, st, en in zip(
+                u_q.tolist(), u_doc.tolist(), u_start.tolist(), u_end.tolist()
+            ):
+                per_query[qi].append(SearchResult(doc_id=d, start=st, end=en))
+            result = FusedBatchResult(
+                per_query=per_query,
+                top_docs=np.asarray(out["top_docs"])[:nq],
+                top_scores=np.asarray(out["top_scores"])[:nq],
+                n_fragments=np.asarray(out["n_fragments"])[:nq],
+            )
+        if phases is not None:
+            phases.setdefault("readout_us", []).append(
+                (time.perf_counter() - t2) * 1e6
+            )
+        return result
+
+    if defer:
+        return PendingBatch(finalize)
+    return finalize()

@@ -8,7 +8,10 @@ the three things heavy traffic needs (ROADMAP north star):
 * **Micro-batching** — concurrent requests are admitted into batches of at
   most ``max_batch`` and each admitted batch is ONE fused device dispatch
   (``search/fused.py``); per-request latency amortizes the dispatch exactly
-  like LM serving batches decode steps.
+  like LM serving batches decode steps.  Consecutive chunks run as a
+  two-deep pipeline (DESIGN.md §15.2): chunk N+1's plan/pack/H2D overlaps
+  chunk N's device compute, riding jax async dispatch — responses stay in
+  admission order and byte-identical to the serial loop.
 * **Caching** — two LRU caches keyed by the index source's generation token
   (``index.incremental.generation_token``): a whole-query result cache and a
   hot posting-slice cache that the planner's cost probe warms (plan-time
@@ -189,9 +192,14 @@ class ServingFrontend:
         arena=None,
         max_inflight: int | None = None,
         shed_deadline_sec: float = 0.0,
+        pipeline: bool = True,
     ):
         self._source = source
         self.max_batch = max(1, int(max_batch))
+        # two-deep micro-batch pipeline (DESIGN.md §15.2): overlap batch
+        # N+1's plan/pack/H2D with batch N's device compute.  Responses are
+        # byte-identical with it on or off; off = the serial reference.
+        self.pipeline = bool(pipeline)
         # admission-control load shedding (DESIGN.md §14): at most
         # max_inflight planned misses per slate run at full budget; the
         # overflow re-admits under shed_deadline_sec -> flagged partial
@@ -391,7 +399,15 @@ class ServingFrontend:
         # Ranking runs at the chunk-wide max top_k; each response is trimmed
         # to its own request's top_k afterwards — rank_documents is a total
         # deterministic order, so the prefix equals a direct top_k ranking.
-        for lo in range(0, len(miss_idx), self.max_batch):
+        #
+        # With ``pipeline=True`` the chunks run as a two-deep pipeline
+        # (DESIGN.md §15.2): chunk c is SUBMITTED (plan/pack/H2D + dispatch,
+        # no barrier), then chunk c-1 — whose device program has been
+        # computing meanwhile — is finalized (readout + response build).
+        # Exactly one batch is ever in flight, chunks finalize in admission
+        # order, and responses land by ``miss_idx`` — byte-identical to the
+        # serial loop (``tests/test_readout.py``).
+        def _submit(lo: int):
             hi = lo + self.max_batch
             chunk_plans = miss_plans[lo:hi]
             chunk_admitted = miss_admitted[lo:hi]
@@ -408,7 +424,14 @@ class ServingFrontend:
                 compute_dtype=self.compute_dtype,
                 admitted=chunk_admitted,
                 residencies=residencies,
+                defer=self.pipeline,
             )
+            return lo, chunk_plans, chunk_admitted, t0, out
+
+        def _finish(state) -> None:
+            lo, chunk_plans, chunk_admitted, t0, out = state
+            if self.pipeline:
+                out = out()  # blocking readout + response build
             elapsed = time.perf_counter() - t0
             self._calibrate(chunk_admitted, elapsed)
             for j, resp in enumerate(out):
@@ -443,6 +466,15 @@ class ServingFrontend:
                     while len(self._result_cache) > self._result_cache_entries:
                         self._result_cache.popitem(last=False)
                 responses[i] = resp
+
+        inflight = None
+        for lo in range(0, len(miss_idx), self.max_batch):
+            state = _submit(lo)
+            if inflight is not None:
+                _finish(inflight)
+            inflight = state
+        if inflight is not None:
+            _finish(inflight)
         for dup, first in aliases:
             responses[dup] = self._from_cache(responses[first])
         return responses

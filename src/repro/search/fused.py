@@ -19,9 +19,13 @@ Combiner — instead of O(rows * positions) dense occupancy sweeps.  With
 the Pallas window kernel (the TPU-native dense layout), gathering back to
 event granularity; both paths produce identical fragments.
 
-Fragments are read out with one ``np.nonzero`` over the whole event batch
-instead of a per-document Python loop.  All shape budgets (events E, rows R,
-lemmas L, table depth K, queries Q) are bucketed to powers of two so the
+Fragment dedup and result assembly run **on device** (DESIGN.md §15.1): the
+program sorts the (query, doc, start, end) fragment keys, drops adjacent
+duplicates, and compacts the survivors into a dense result buffer, so the
+host readout is ONE fixed-shape D2H copy per batch — no host ``np.nonzero``
+/ ``np.unique`` on the serving path (``readout="host"`` keeps the legacy
+host dedup as a differential reference).  All shape budgets (events E, rows
+R, lemmas L, table depth K, queries Q) are bucketed to powers of two so the
 number of distinct compiled programs stays logarithmic in the workload
 spread (DESIGN.md §9.2).
 
@@ -60,11 +64,13 @@ __all__ = [
     "SegmentEvents",
     "QueryBatchPlan",
     "FusedBatchResult",
+    "PendingBatch",
     "bucket_pow2",
     "extract_segment_events",
     "intersect_candidates",
     "plan_query_batch",
     "fused_serve_batch",
+    "lower_query_batch",
     "run_query_batch",
     "serve_query_batch",
     "dispatch_count",
@@ -98,17 +104,29 @@ def reset_dispatch_count() -> None:
 # ---------------------------------------------------------------------------
 
 # When a sink dict is installed, the serving paths attribute wall time to
-# the five phases of a batch (plan / pack / h2d / dispatch / readout µs,
-# appended per batch) — BLOCKING between phases for accuracy, so the sink is
-# bench-only; production serving (sink=None) keeps the async overlap.
+# the six phases of a batch, appended per batch in µs (DESIGN.md §15.3):
+#
+#   plan_us      host posting reads + segment extraction
+#   pack_us      host-side batch packing (or arena descriptor planning)
+#   h2d_us       ENQUEUE time of the input transfers (async; no barrier)
+#   dispatch_us  jit-call SUBMIT time (tracing/cache lookup + enqueue)
+#   compute_us   block_until_ready wait for the device program (only
+#                recorded when a sink is installed — production serving
+#                never inserts this barrier; under the two-deep pipeline it
+#                measures the NON-overlapped remainder of device time)
+#   readout_us   the fixed-shape D2H result-buffer copy + split
+#
+# The six sum to the serial batch wall time with no double-counting: every
+# timestamp closes one phase and opens the next.  The sink itself adds no
+# barriers beyond the compute_us wait.
 _PHASE_SINK: dict | None = None
 
 
 def collect_phases(sink: dict | None) -> dict | None:
     """Install (or clear, with ``None``) the phase-breakdown sink used by
-    ``benchmarks/run.py`` to attribute batch latency (plan / pack / H2D /
-    dispatch / readout — the DESIGN.md §13.5 attribution).  Returns the
-    previous sink."""
+    ``benchmarks/run.py`` to attribute batch latency (plan / pack / h2d /
+    dispatch / compute / readout — the DESIGN.md §15.3 attribution).
+    Returns the previous sink."""
     global _PHASE_SINK
     prev, _PHASE_SINK = _PHASE_SINK, sink
     return prev
@@ -487,6 +505,61 @@ def plan_query_batch(
 # the fused device program
 # ---------------------------------------------------------------------------
 
+_I32_SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+def _assemble_fragments(
+    q: jax.Array,  # [E] int32 query index per event
+    d: jax.Array,  # [E] int32 doc id per event
+    s: jax.Array,  # [E] int32 fragment start per event
+    e: jax.Array,  # [E] int32 fragment end per event
+    valid: jax.Array,  # [E] bool emitting primary events
+    query_budget: int,
+) -> jax.Array:
+    """Device-side fragment dedup + result assembly (DESIGN.md §15.1).
+
+    Sorts the per-event fragment keys ``(q, d, s, e)`` lexicographically
+    (invalid events carry the int32 sentinel in every column and sort last),
+    drops adjacent duplicates, and compacts the survivors to the head of a
+    dense ``[E + Q, 4]`` int32 result buffer — the same dedup the host
+    readout's ``np.unique`` over packed ``frag_key`` performs, with the same
+    output order (ascending ``(q, doc, start, end)``), but with no host
+    ``nonzero``/``unique`` and no bit-packing (four int32 sort keys instead
+    of one packed int64, so there is no width budget to overflow).
+
+    The trailing ``Q`` rows carry the per-query unique-fragment counts in
+    column 0, so the whole readout is ONE fixed-shape D2H copy: the host
+    splits ``buf[:counts.sum()]`` by ``cumsum(counts)`` — rows are already
+    grouped by query because the sort key leads with ``q``.
+    """
+    cap = q.shape[0]
+    qk = jnp.where(valid, q, _I32_SENTINEL)
+    dk = jnp.where(valid, d, _I32_SENTINEL)
+    sk = jnp.where(valid, s, _I32_SENTINEL)
+    ek = jnp.where(valid, e, _I32_SENTINEL)
+    qs, ds, ss, es = jax.lax.sort((qk, dk, sk, ek), num_keys=4)
+
+    def prev(col: jax.Array) -> jax.Array:
+        return jnp.concatenate([jnp.full((1,), -1, col.dtype), col[:-1]])
+
+    fin = qs < _I32_SENTINEL
+    dup = (qs == prev(qs)) & (ds == prev(ds)) & (ss == prev(ss)) & (es == prev(es))
+    uniq = fin & ~dup
+    # compaction scatter: unique survivors go to their prefix-sum slot,
+    # everything else to an out-of-bounds destination dropped by the scatter
+    dest = jnp.where(
+        uniq, jnp.cumsum(uniq.astype(jnp.int32)) - 1, cap + query_budget
+    )
+    rows = jnp.stack([qs, ds, ss, es], axis=1)
+    buf = jnp.full((cap + query_budget, 4), -1, jnp.int32)
+    buf = buf.at[dest].set(rows, mode="drop")
+    counts = (
+        jnp.zeros((query_budget,), jnp.int32)
+        .at[jnp.clip(qs, 0, query_budget - 1)]
+        .add(uniq.astype(jnp.int32))
+    )
+    return buf.at[cap:, 0].set(counts)
+
 
 @functools.partial(
     jax.jit,
@@ -529,9 +602,11 @@ def fused_serve_batch(
     stage 3  per-query top-k via a [Q, R] masked selection over row scores.
 
     ``top_docs`` is row-level: a document reachable through two subqueries
-    of the same query occupies two rows and its duplicate fragments are not
-    deduplicated on device — exact ranking uses the fragment readout
-    (DESIGN.md §9.3).
+    of the same query occupies two rows — exact ranking uses the fragment
+    readout (DESIGN.md §9.3).  Fragments themselves ARE deduplicated on
+    device: ``res`` is the §15.1 dense result buffer
+    (``_assemble_fragments`` — sorted unique ``(q, doc, start, end)`` rows
+    plus per-query counts), read out as one fixed-shape D2H copy.
     """
     r, l, k = postab.shape
     n = window_len
@@ -611,9 +686,17 @@ def fused_serve_batch(
         .at[jnp.clip(row_query, 0, q - 1)]
         .add(jnp.where(row_query >= 0, frag_per_row, 0))
     )
+
+    # ---- §15.1 device-side result assembly --------------------------------
+    ev_q = row_query[row_s]
+    ev_d = row_doc[row_s]
+    frag_valid = emit & (primary > 0) & (ev_q >= 0) & (ev_d >= 0)
+    res = _assemble_fragments(ev_q, ev_d, start, pos, frag_valid, q)
+
     return {
         "emit": emit,
         "start": start,
+        "res": res,
         "top_docs": top_docs,
         "top_scores": top_scores,
         "n_fragments": n_fragments,
@@ -625,16 +708,96 @@ def fused_serve_batch(
 # ---------------------------------------------------------------------------
 
 
-@dataclass
 class FusedBatchResult:
     """Per-query exact fragment sets plus the device's slot-level ranking
     (DESIGN.md §9.3: the fragment readout is the exact §10.2 result; the
-    device top-k is row-level, for dashboards/serve_step consumers)."""
+    device top-k is row-level, for dashboards/serve_step consumers).
 
-    per_query: list[list[SearchResult]]  # deduped fragment union per query
-    top_docs: np.ndarray  # [Q, K] int32 (-1 pad)
-    top_scores: np.ndarray  # [Q, K] float32
-    n_fragments: np.ndarray  # [Q] pre-dedup emit counts
+    The device readout (§15.1) carries fragments as the compact
+    ``frag_rows``/``frag_offsets`` pair — ``per_query`` materializes
+    ``SearchResult`` objects lazily on first access, keeping Python object
+    construction off the readout-phase critical path.  The host readout and
+    the empty/merge paths construct eagerly with ``per_query=...``.
+    """
+
+    __slots__ = (
+        "top_docs",
+        "top_scores",
+        "n_fragments",
+        "frag_rows",
+        "frag_offsets",
+        "_per_query",
+    )
+
+    def __init__(
+        self,
+        *,
+        top_docs: np.ndarray,  # [Q, K] int32 (-1 pad)
+        top_scores: np.ndarray,  # [Q, K] float32
+        n_fragments: np.ndarray,  # [Q] pre-dedup emit counts
+        per_query: list[list[SearchResult]] | None = None,
+        frag_rows: np.ndarray | None = None,  # [F, 3] int32 (doc, start, end)
+        frag_offsets: np.ndarray | None = None,  # [Q + 1] int64 cumulative
+    ):
+        if per_query is None and frag_offsets is None:
+            raise ValueError("need per_query or frag_rows/frag_offsets")
+        self.top_docs = top_docs
+        self.top_scores = top_scores
+        self.n_fragments = n_fragments
+        self.frag_rows = frag_rows
+        self.frag_offsets = frag_offsets
+        self._per_query = per_query
+
+    @property
+    def n_queries(self) -> int:
+        if self._per_query is not None:
+            return len(self._per_query)
+        return len(self.frag_offsets) - 1
+
+    def n_results(self, qi: int) -> int:
+        """Deduped fragment count for query ``qi`` without materializing
+        ``SearchResult`` objects (stats accounting on the serving path)."""
+        if self._per_query is not None:
+            return len(self._per_query[qi])
+        return int(self.frag_offsets[qi + 1] - self.frag_offsets[qi])
+
+    @property
+    def per_query(self) -> list[list[SearchResult]]:
+        """Deduped fragment union per query, sorted by (doc, start, end);
+        materialized from ``frag_rows`` on first access and cached."""
+        if self._per_query is None:
+            rows = self.frag_rows.tolist()
+            offs = self.frag_offsets.tolist()
+            make = SearchResult._make
+            self._per_query = [
+                [make(r) for r in rows[offs[qi] : offs[qi + 1]]]
+                for qi in range(len(offs) - 1)
+            ]
+        return self._per_query
+
+
+class PendingBatch:
+    """Handle for an in-flight query batch (DESIGN.md §15.2).
+
+    ``run_query_batch``/``run_arena_batch``/``serve_query_batch`` with
+    ``defer=True`` return one of these right after SUBMITTING the device
+    program — the H2D copies and the program itself are enqueued but not
+    awaited, so the caller can plan/pack/submit the next batch while this
+    one computes.  ``result()`` performs the blocking readout (idempotent;
+    the result is cached).
+    """
+
+    __slots__ = ("_thunk", "_result")
+
+    def __init__(self, thunk):
+        self._thunk = thunk
+        self._result = None
+
+    def result(self) -> FusedBatchResult:
+        if self._thunk is not None:
+            self._result = self._thunk()
+            self._thunk = None
+        return self._result
 
 
 def empty_batch_result(n_queries: int, top_k: int) -> FusedBatchResult:
@@ -643,6 +806,91 @@ def empty_batch_result(n_queries: int, top_k: int) -> FusedBatchResult:
         top_docs=np.full((n_queries, top_k), -1, np.int32),
         top_scores=np.full((n_queries, top_k), -np.inf, np.float32),
         n_fragments=np.zeros((n_queries,), np.int64),
+    )
+
+
+def _dedup_fragments(
+    q_of: np.ndarray, docs: np.ndarray, starts: np.ndarray, ends: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side fragment dedup: sorted unique ``(q, doc, start, end)``
+    columns, in the same ascending order the §15.1 device assembly emits.
+
+    Two tiers, mirroring the arena's pack32/argsort split
+    (``plan_arena_batch``): when the packed key fits int64 the dedup is one
+    ``np.unique`` over ``((q * D + doc) * N + start) * N + end``; otherwise
+    — wide doc-id spaces or very long documents, where packing would
+    silently alias distinct fragments — it falls back to ``np.lexsort`` +
+    adjacent-diff, which has no width budget at all.
+    """
+    if q_of.size == 0:
+        z = np.zeros((0,), np.int64)
+        return z, z, z, z
+    doc_mod = int(docs.max(initial=0)) + 1
+    n_mod = int(max(starts.max(initial=0), ends.max(initial=0))) + 1
+    q_mod = int(q_of.max(initial=0)) + 1
+    if (q_mod * doc_mod * n_mod * n_mod - 1).bit_length() <= 63:
+        frag_key = ((q_of * doc_mod + docs) * n_mod + starts) * n_mod + ends
+        uniq = np.unique(frag_key)
+        u_end = uniq % n_mod
+        u_start = (uniq // n_mod) % n_mod
+        u_doc = (uniq // (n_mod * n_mod)) % doc_mod
+        u_q = uniq // (n_mod * n_mod * doc_mod)
+        return u_q, u_doc, u_start, u_end
+    order = np.lexsort((ends, starts, docs, q_of))
+    q_s, d_s, s_s, e_s = q_of[order], docs[order], starts[order], ends[order]
+    keep = np.ones(q_s.shape, bool)
+    keep[1:] = (
+        (q_s[1:] != q_s[:-1])
+        | (d_s[1:] != d_s[:-1])
+        | (s_s[1:] != s_s[:-1])
+        | (e_s[1:] != e_s[:-1])
+    )
+    return q_s[keep], d_s[keep], s_s[keep], e_s[keep]
+
+
+def _split_result_buffer(
+    buf: np.ndarray, n_queries: int, query_budget: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Split the fetched §15.1 result buffer into ``(frag_rows,
+    frag_offsets)``: the trailing ``query_budget`` rows carry per-query
+    counts in column 0; the head rows are the compacted unique fragments,
+    already grouped by query in ascending key order."""
+    cap = buf.shape[0] - query_budget
+    counts = buf[cap : cap + n_queries, 0].astype(np.int64)
+    offsets = np.zeros((n_queries + 1,), np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    frag_rows = buf[: int(offsets[-1]), 1:4]
+    return frag_rows, offsets
+
+
+def lower_query_batch(
+    plan: QueryBatchPlan,
+    *,
+    max_distance: int,
+    top_k: int = 16,
+    use_kernel: bool = False,
+    compute_dtype: str = "uint8",
+    interpret: bool = True,
+):
+    """Lower ONE fused device program WITHOUT dispatching it (DESIGN.md
+    §15.4).  Returns the jax ``Lowered`` object for the exact program
+    :func:`run_query_batch` would execute; callers compile it and feed
+    ``.as_text()`` to ``launch/hlo_analysis.analyze_hlo`` for the serving
+    roofline (``benchmarks/paper_tables.bench_roofline``)."""
+    return fused_serve_batch.lower(
+        jnp.asarray(plan.events),
+        jnp.asarray(plan.primary),
+        jnp.asarray(plan.postab),
+        jnp.asarray(plan.row_doc),
+        jnp.asarray(plan.row_query),
+        jnp.asarray(plan.mult),
+        max_distance=max_distance,
+        query_budget=plan.query_budget,
+        window_len=plan.doc_len,
+        top_k=top_k,
+        compute_dtype=compute_dtype,
+        use_kernel=use_kernel,
+        interpret=interpret,
     )
 
 
@@ -655,10 +903,20 @@ def run_query_batch(
     compute_dtype: str = "uint8",
     interpret: bool = True,
     stats: QueryStats | None = None,
-) -> FusedBatchResult:
-    """Dispatch ONE device program for the plan and read fragments out with a
-    single ``np.nonzero`` over the whole event batch (DESIGN.md §9.3; the
-    fragment sets are exact §10.2 results, identical to the scalar Combiner)."""
+    readout: str = "device",
+    defer: bool = False,
+) -> FusedBatchResult | PendingBatch:
+    """Dispatch ONE device program for the plan and read results out of the
+    §15.1 device-assembled dense buffer — one fixed-shape D2H copy
+    (``readout="device"``; the fragment sets are exact §10.2 results,
+    identical to the scalar Combiner).  ``readout="host"`` instead fetches
+    the per-event emit/start arrays and dedups on the host — the legacy
+    path, kept as the differential reference (``tests/test_readout.py``).
+    ``defer=True`` returns a :class:`PendingBatch` right after submit, so
+    the device program runs while the caller prepares the next batch
+    (§15.2)."""
+    if readout not in ("device", "host"):
+        raise ValueError(f"unknown readout mode: {readout!r}")
     global _DISPATCHES
     sink = _PHASE_SINK
     t0 = time.perf_counter()
@@ -675,9 +933,10 @@ def run_query_batch(
             plan.events.nbytes + plan.primary.nbytes + plan.postab.nbytes
             + plan.row_doc.nbytes + plan.row_query.nbytes + plan.mult.nbytes
         )
-    if sink is not None:
-        jax.block_until_ready(inputs)
-        t0 = _phase(sink, "h2d_us", t0)
+    # enqueue time only: the transfers complete asynchronously, overlapped
+    # with submit — the premature block_until_ready(inputs) that used to sit
+    # here forced a full H2D sync inside the dispatch window
+    t0 = _phase(sink, "h2d_us", t0)
     out = fused_serve_batch(
         *inputs,
         max_distance=max_distance,
@@ -691,42 +950,61 @@ def run_query_batch(
     _DISPATCHES += 1
     if stats is not None:
         stats.device_dispatches += 1
-    if sink is not None:
-        jax.block_until_ready(out)
-        t0 = _phase(sink, "dispatch_us", t0)
+    _phase(sink, "dispatch_us", t0)
 
-    # vectorized readout: one nonzero over the event batch (primary events
-    # carry one fragment per emitting position), then one np.unique for the
-    # cross-segment dedup — no per-document Python loop, no set hashing
-    emit = np.asarray(out["emit"]) & (plan.primary > 0)
-    (hits,) = np.nonzero(emit)
-    starts = np.asarray(out["start"])[hits].astype(np.int64)
-    ends = plan.events[hits, 1].astype(np.int64)
-    rows = plan.events[hits, 0]
-    docs = plan.row_doc[rows].astype(np.int64)
-    q_of = plan.row_query[rows].astype(np.int64)
-    n = plan.doc_len
     nq = plan.n_queries
-    live = (q_of >= 0) & (q_of < nq)
-    frag_key = ((q_of * (docs.max(initial=0) + 1) + docs) * n + starts) * n + ends
-    uniq = np.unique(frag_key[live])
-    u_end = uniq % n
-    u_start = (uniq // n) % n
-    u_doc = (uniq // (n * n)) % (docs.max(initial=0) + 1)
-    u_q = uniq // (n * n * (docs.max(initial=0) + 1))
-    per_query: list[list[SearchResult]] = [[] for _ in range(nq)]
-    for qi, d, st, en in zip(
-        u_q.tolist(), u_doc.tolist(), u_start.tolist(), u_end.tolist()
-    ):
-        per_query[qi].append(SearchResult(doc_id=d, start=st, end=en))
-    result = FusedBatchResult(
-        per_query=per_query,
-        top_docs=np.asarray(out["top_docs"])[:nq],
-        top_scores=np.asarray(out["top_scores"])[:nq],
-        n_fragments=np.asarray(out["n_fragments"])[:nq],
-    )
-    _phase(sink, "readout_us", t0)
-    return result
+
+    def finalize() -> FusedBatchResult:
+        t1 = time.perf_counter()
+        if sink is not None:
+            # bench-only barrier: bills device time to compute_us instead of
+            # whichever phase bracket happens to enclose the first fetch
+            jax.block_until_ready(out)
+            t1 = _phase(sink, "compute_us", t1)
+        if readout == "device":
+            buf = np.asarray(out["res"])
+            frag_rows, frag_offsets = _split_result_buffer(
+                buf, nq, plan.query_budget
+            )
+            result = FusedBatchResult(
+                frag_rows=frag_rows,
+                frag_offsets=frag_offsets,
+                top_docs=np.asarray(out["top_docs"])[:nq],
+                top_scores=np.asarray(out["top_scores"])[:nq],
+                n_fragments=np.asarray(out["n_fragments"])[:nq],
+            )
+        else:
+            # legacy host readout: one nonzero over the event batch (primary
+            # events carry one fragment per emitting position), then the
+            # two-tier host dedup — differential reference for §15.1
+            emit = np.asarray(out["emit"]) & (plan.primary > 0)
+            (hits,) = np.nonzero(emit)
+            starts = np.asarray(out["start"])[hits].astype(np.int64)
+            ends = plan.events[hits, 1].astype(np.int64)
+            rows = plan.events[hits, 0]
+            docs = plan.row_doc[rows].astype(np.int64)
+            q_of = plan.row_query[rows].astype(np.int64)
+            live = (q_of >= 0) & (q_of < nq)
+            u_q, u_doc, u_start, u_end = _dedup_fragments(
+                q_of[live], docs[live], starts[live], ends[live]
+            )
+            per_query: list[list[SearchResult]] = [[] for _ in range(nq)]
+            for qi, d, st, en in zip(
+                u_q.tolist(), u_doc.tolist(), u_start.tolist(), u_end.tolist()
+            ):
+                per_query[qi].append(SearchResult(doc_id=d, start=st, end=en))
+            result = FusedBatchResult(
+                per_query=per_query,
+                top_docs=np.asarray(out["top_docs"])[:nq],
+                top_scores=np.asarray(out["top_scores"])[:nq],
+                n_fragments=np.asarray(out["n_fragments"])[:nq],
+            )
+        _phase(sink, "readout_us", t1)
+        return result
+
+    if defer:
+        return PendingBatch(finalize)
+    return finalize()
 
 
 # ---------------------------------------------------------------------------
@@ -737,25 +1015,57 @@ def run_query_batch(
 def _merge_results(
     results: Sequence[FusedBatchResult], n_queries: int, top_k: int
 ) -> FusedBatchResult:
-    """Union per-query fragment sets (set dedup, as the single-program
-    readout's ``np.unique`` does) and re-merge the row-level top-k lists of
-    a split arena + host execution."""
+    """Union per-query fragment sets and re-merge the row-level top-k lists
+    of a split arena + host execution.  Device-readout results merge at the
+    array level — concatenate fragment columns, re-dedup with the two-tier
+    host dedup — so a mixed batch never materializes ``SearchResult``
+    objects; results that already carry ``per_query`` lists union as sets
+    (the same dedup)."""
     if len(results) == 1:
         return results[0]
+    scores = np.concatenate([r.top_scores for r in results], axis=1)
+    docs = np.concatenate([r.top_docs for r in results], axis=1)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :top_k]
+    top_docs = np.take_along_axis(docs, order, axis=1)
+    top_scores = np.take_along_axis(scores, order, axis=1)
+    n_fragments = sum(r.n_fragments for r in results)
+    if all(r.frag_offsets is not None and r._per_query is None for r in results):
+        q_col = np.concatenate(
+            [
+                np.repeat(
+                    np.arange(n_queries, dtype=np.int64),
+                    np.diff(r.frag_offsets),
+                )
+                for r in results
+            ]
+        )
+        rows = np.concatenate(
+            [r.frag_rows for r in results], dtype=np.int64, casting="unsafe"
+        ).reshape(-1, 3)
+        u_q, u_d, u_s, u_e = _dedup_fragments(
+            q_col, rows[:, 0], rows[:, 1], rows[:, 2]
+        )
+        counts = np.bincount(u_q, minlength=n_queries)
+        offsets = np.zeros((n_queries + 1,), np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        return FusedBatchResult(
+            frag_rows=np.stack([u_d, u_s, u_e], axis=1).astype(np.int32),
+            frag_offsets=offsets,
+            top_docs=top_docs,
+            top_scores=top_scores,
+            n_fragments=n_fragments,
+        )
     per_query: list[list[SearchResult]] = []
     for qi in range(n_queries):
         union: set[SearchResult] = set()
         for r in results:
             union.update(r.per_query[qi])
         per_query.append(sorted(union))
-    scores = np.concatenate([r.top_scores for r in results], axis=1)
-    docs = np.concatenate([r.top_docs for r in results], axis=1)
-    order = np.argsort(-scores, axis=1, kind="stable")[:, :top_k]
     return FusedBatchResult(
         per_query=per_query,
-        top_docs=np.take_along_axis(docs, order, axis=1),
-        top_scores=np.take_along_axis(scores, order, axis=1),
-        n_fragments=sum(r.n_fragments for r in results),
+        top_docs=top_docs,
+        top_scores=top_scores,
+        n_fragments=n_fragments,
     )
 
 
@@ -772,7 +1082,9 @@ def serve_query_batch(
     batch_stats: QueryStats | None = None,
     residencies: dict | None = None,
     intersect_device_threshold: int = INTERSECT_DEVICE_THRESHOLD,
-) -> FusedBatchResult:
+    readout: str = "device",
+    defer: bool = False,
+) -> FusedBatchResult | PendingBatch:
     """Serve one query batch, routing each (subquery, shard) work item over
     the device-resident posting arena when its keys are resident and through
     the host-pack path otherwise (DESIGN.md §13).
@@ -789,6 +1101,11 @@ def serve_query_batch(
     the arena program reproduces the host pack's dedup, Step-1/Step-2 gates
     and rank cover bit-for-bit (``tests/test_arena.py``,
     ``tests/test_differential.py``).
+
+    ``readout``/``defer`` forward to ``run_query_batch`` /
+    ``run_arena_batch``: with ``defer=True`` the return value is a
+    :class:`PendingBatch` whose device program(s) are submitted but not
+    awaited — the §15.2 double-buffer hook the frontend pipeline rides.
     """
     from .arena import ArenaOverflow, plan_arena_batch, run_arena_batch
 
@@ -894,6 +1211,8 @@ def serve_query_batch(
                     interpret=interpret,
                     stats=batch_stats,
                     phases=sink,
+                    readout=readout,
+                    defer=defer,
                 )
             )
             _DISPATCHES += 1
@@ -914,8 +1233,19 @@ def serve_query_batch(
                     compute_dtype=compute_dtype,
                     interpret=interpret,
                     stats=batch_stats,
+                    readout=readout,
+                    defer=defer,
                 )
             )
+    n_queries = len(work)
     if not results:
-        return empty_batch_result(len(work), top_k)
-    return _merge_results(results, len(work), top_k)
+        empty = empty_batch_result(n_queries, top_k)
+        return PendingBatch(lambda: empty) if defer else empty
+    if defer:
+        pending = list(results)
+        return PendingBatch(
+            lambda: _merge_results(
+                [p.result() for p in pending], n_queries, top_k
+            )
+        )
+    return _merge_results(results, n_queries, top_k)

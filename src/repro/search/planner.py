@@ -290,6 +290,7 @@ def execute_plans(
     compute_dtype: str = "uint8",
     admitted: Sequence[Sequence[SubqueryPlan]] | None = None,
     residencies: dict | None = None,
+    defer: bool = False,
 ) -> list:
     """Execute a batch of plans as ONE fused device dispatch (§5 stage 3–4).
 
@@ -304,6 +305,12 @@ def execute_plans(
     admitted subqueries (exactness pinned by ``tests/test_planner.py``);
     ranking is ``rank_documents`` over the exact fragment union, identical
     to ``SearchEngine``.
+
+    ``defer=True`` returns a zero-argument *finalize* callable instead: the
+    device program is submitted but not awaited, and calling it performs
+    the readout and builds the responses — the DESIGN.md §15.2 hook the
+    frontend's two-deep pipeline uses to overlap batch N's compute with
+    batch N+1's plan/pack/H2D.
     """
     from .engine import QueryResponse, RankedDoc
 
@@ -316,7 +323,7 @@ def execute_plans(
         for subs in admitted
     ]
     batch_stats = QueryStats()
-    result = serve_query_batch(
+    pending = serve_query_batch(
         work,
         max_distance=max_distance,
         top_k=top_k,
@@ -326,33 +333,41 @@ def execute_plans(
         stats=per_stats,
         batch_stats=batch_stats,
         residencies=residencies,
+        defer=defer,
     )
-    for st in per_stats:
-        # batch-level quantities: one shared dispatch/transfer, assigned
-        # (not accumulated) per query so aggregation never over-counts
-        st.device_dispatches = batch_stats.device_dispatches
-        st.h2d_bytes = batch_stats.h2d_bytes
-    elapsed = time.perf_counter() - t0
-    responses = []
-    for qi, plan in enumerate(plans):
-        fragments = result.per_query[qi]
-        docs = [
-            RankedDoc(doc_id=d, score=s, fragments=f)
-            for d, s, f in rank_documents(fragments, top_k=top_k)
-        ]
-        st = per_stats[qi]
-        st.results = len(fragments)
-        st.pruned_subqueries = plan.n_pruned
-        n_admitted = len(admitted[qi])
-        st.skipped_subqueries = len(plan.executable()) - n_admitted
-        st.partial = st.skipped_subqueries > 0
-        st.elapsed_sec = elapsed  # batch wall time (one shared dispatch)
-        responses.append(
-            QueryResponse(
-                query=plan.query,
-                docs=docs,
-                stats=st,
-                n_subqueries=len(plan.subqueries),
+
+    def finalize() -> list:
+        result = pending.result() if defer else pending
+        for st in per_stats:
+            # batch-level quantities: one shared dispatch/transfer, assigned
+            # (not accumulated) per query so aggregation never over-counts
+            st.device_dispatches = batch_stats.device_dispatches
+            st.h2d_bytes = batch_stats.h2d_bytes
+        elapsed = time.perf_counter() - t0
+        responses = []
+        for qi, plan in enumerate(plans):
+            fragments = result.per_query[qi]
+            docs = [
+                RankedDoc(doc_id=d, score=s, fragments=f)
+                for d, s, f in rank_documents(fragments, top_k=top_k)
+            ]
+            st = per_stats[qi]
+            st.results = len(fragments)
+            st.pruned_subqueries = plan.n_pruned
+            n_admitted = len(admitted[qi])
+            st.skipped_subqueries = len(plan.executable()) - n_admitted
+            st.partial = st.skipped_subqueries > 0
+            st.elapsed_sec = elapsed  # batch wall time (one shared dispatch)
+            responses.append(
+                QueryResponse(
+                    query=plan.query,
+                    docs=docs,
+                    stats=st,
+                    n_subqueries=len(plan.subqueries),
+                )
             )
-        )
-    return responses
+        return responses
+
+    if defer:
+        return finalize
+    return finalize()

@@ -43,7 +43,7 @@ def rank_documents(
       an unsorted sum could rank equal-score documents differently between
       otherwise fragment-identical serving paths;
     * the returned ``fragments`` list is sorted by ``(start, end)`` (the
-      ``SearchResult`` dataclass order restricted to one document).
+      ``SearchResult`` tuple order restricted to one document).
 
     Empty or duplicate-free input degrades naturally: no results -> ``[]``;
     ``top_k <= 0`` -> ``[]``.

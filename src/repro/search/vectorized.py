@@ -146,7 +146,9 @@ class VectorizedEngine:
                 stats.postings_read += st.postings_read
                 stats.bytes_read += st.bytes_read
                 stats.empty_subqueries += st.empty_subqueries
-        stats.results = sum(len(r) for r in result.per_query)
+        # offset arithmetic, not len(per_query[qi]): counting must not force
+        # the lazy SearchResult materialization of the §15.1 device readout
+        stats.results = sum(result.n_results(qi) for qi in range(len(batch)))
         return result, stats
 
     def search_subquery(

@@ -24,6 +24,12 @@ Pins the two contracts every engine-level refactor must preserve:
    stale device buffers) and under budget-forced partial residency
    (non-resident keys fall back to the host pack mid-batch).
 
+5. **Device readout == host readout == oracle** — the §15.1 device-side
+   result assembly (segmented sort + dedup on device, one fixed-shape D2H
+   copy) equals the legacy host ``np.nonzero`` + dedup readout and the
+   oracle, after randomized mutations, under budget-forced partial
+   residency (mixed arena/host merge), and through a dead-shard fan-out.
+
 Runs under real ``hypothesis`` (fixed seed via ``derandomize``) or the
 deterministic shim — both bounded to a small example budget for CI.
 """
@@ -256,6 +262,87 @@ def test_arena_matches_host_and_oracle_under_mutation(seed):
         ra = ft.search(query, top_k=32)
         rb = check_host.search(query, top_k=32)
         assert _response_frags(ra) == _response_frags(rb), (query, "partial-residency")
+
+
+# ---------------------------------------------------------------------------
+# 5. DESIGN.md §15.1: device readout == host readout == oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seeds)
+def test_device_readout_matches_host_and_oracle(seed):
+    """The §15.1 device-assembled result buffer equals the legacy host
+    ``np.nonzero`` + dedup readout and the §10 oracle — after randomized
+    add/delete/compact sequences, under budget-forced partial residency
+    (mixed arena/host merge, both readouts per sub-batch), and through a
+    dead-shard fan-out (the sharded service's merge over per-shard device
+    buffers)."""
+    from functools import partial
+
+    from repro.search import distributed as dist_mod
+    from repro.search.arena import PostingArena
+    from repro.search.distributed import ShardedSearchService
+    from repro.search.fused import serve_query_batch
+
+    spec = make_corpus(seed, max_docs=8)
+    ix = _run_ops(spec, seed)
+    store = ix.surviving_store()
+    queries = make_queries(seed, spec, n_queries=2)
+    work = [
+        [(sub, ix.index) for sub in expand_subqueries(q, store.lemmatizer)]
+        for q in queries
+    ]
+
+    def both_readouts(residencies=None, tag=""):
+        dev, host = (
+            serve_query_batch(
+                work,
+                max_distance=ix.index.max_distance,
+                residencies=residencies,
+                readout=mode,
+            )
+            for mode in ("device", "host")
+        )
+        for qi, q in enumerate(queries):
+            got = _frag_set(dev.per_query[qi])
+            assert got == _frag_set(host.per_query[qi]), (q, tag, "device != host")
+            oracle_union = set()
+            for sub in expand_subqueries(q, store.lemmatizer):
+                oracle_union |= _frag_set(_oracle_subquery(sub, ix.index))
+            assert got == oracle_union, (q, tag, "device != oracle")
+
+    both_readouts(tag="host-pack")
+    # full residency, then a budget that forces the mixed arena/host merge
+    arena = PostingArena()
+    res = arena.acquire(ix.index, 0)
+    both_readouts({id(ix.index): res}, tag="arena")
+    sizes = sorted(fb.nbytes for fb in arena._entries.values()) or [1024]
+    arena.release()
+    tiny = PostingArena(budget_bytes=sizes[0] + 1)
+    both_readouts({id(ix.index): tiny.acquire(ix.index, 0)}, tag="partial")
+    tiny.release()
+
+    # dead-shard fan-out: the per-shard device buffers merge to exactly the
+    # live shards' host-readout fragments
+    n_shards = 2
+    svc = ShardedSearchService(
+        store,
+        n_shards=n_shards,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+        algorithm="fused",
+    )
+    for q in queries:
+        ra = svc.search(q, top_k=32, dead_shards=(1,))
+        try:
+            dist_mod.serve_query_batch = partial(serve_query_batch, readout="host")
+            rb = svc.search(q, top_k=32, dead_shards=(1,))
+        finally:
+            dist_mod.serve_query_batch = serve_query_batch
+        assert _response_frags(ra) == _response_frags(rb), (q, "dead-shard")
+        assert all(d.doc_id % n_shards != 1 for d in ra.docs), (q, "dead shard leaked")
 
 
 @settings(max_examples=4, deadline=None, derandomize=True)
