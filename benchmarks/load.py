@@ -1,0 +1,433 @@
+"""Deterministic traffic/load generator for the §16 serving daemon.
+
+Drives the ``ServiceDaemon`` three ways and records ``BENCH_traffic.json``:
+
+* **throughput** — deterministic batched-vs-serial QPS over fixed slates
+  (warm jit cache, same compiled shapes every run): the same-run ratio is
+  the machine-independent regression metric the CI gate checks.
+* **closed loop** — C concurrent clients, one outstanding request each,
+  resubmitting on completion (real clock, threaded): sustained QPS,
+  p50/p99/p999 latency, batch-occupancy histogram.
+* **open loop** — a seeded arrival schedule at a target QPS paced in real
+  time through the started daemon: sustained QPS, tail latency,
+  partial/shed/error rates under bursty admission.
+* **replay** — the SAME seeded schedule replayed on a virtual clock
+  (``ServiceDaemon.replay``): exact, machine-independent batch occupancy
+  (the continuous-batching evidence: occupancy > 1 at saturation).
+
+The query mix is Zipf over the corpus's stop / frequently-used / ordinary
+lemma classes (§5 traffic shape) and fully determined by ``seed``: equal
+seeds produce the identical request sequence, so the exactness section —
+sampled responses compared against a fresh single-frontend reference —
+is a differential gate (``traffic_results_MISMATCH`` /
+``traffic_shed_UNFLAGGED``), not a statistical one: every sampled
+no-deadline response must be byte-identical to the reference, and every
+response that diverges (deadline partial, shed) must carry its flag.
+
+Run: ``PYTHONPATH=src python -m benchmarks.load [--smoke] [--json PATH]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from repro.core.lemma import LemmaType  # noqa: E402
+from repro.index import build_indexes, synthesize_corpus  # noqa: E402
+from repro.runtime.clock import ManualClock  # noqa: E402
+from repro.search.frontend import SearchRequest, ServingFrontend  # noqa: E402
+from repro.search.service import ServiceDaemon  # noqa: E402
+
+# Zipf class weights of the generated traffic: stop-heavy, like the
+# paper's worst-case evaluation queries
+CLASS_WEIGHTS = {LemmaType.STOP: 0.5, LemmaType.FREQUENTLY_USED: 0.3,
+                 LemmaType.ORDINARY: 0.2}
+
+
+def build_stack(n_docs=120, doc_len=90, seed=29):
+    store = synthesize_corpus(n_docs=n_docs, doc_len=doc_len, vocab_size=2000,
+                              seed=seed)
+    index = build_indexes(store, sw_count=60, fu_count=200, max_distance=5)
+    return store, index
+
+
+def make_query_mix(store, index, n_queries, seed):
+    """Seeded query mix sampled from real document windows (so proximity
+    result sets are non-trivial — independent word draws almost never
+    co-occur within max_distance), with per-word lemma class drawn from
+    the stop-heavy ``CLASS_WEIGHTS`` mix, mirroring the paper's worst-case
+    query selection."""
+    rng = np.random.default_rng(seed)
+    docs = store.documents
+    classes = list(CLASS_WEIGHTS)
+    weights = np.array([CLASS_WEIGHTS[t] for t in classes], dtype=np.float64)
+    weights /= weights.sum()
+    queries = []
+    while len(queries) < n_queries:
+        d = docs[int(rng.integers(len(docs)))]
+        if len(d) < 12:
+            continue
+        start = int(rng.integers(0, len(d) - 10))
+        window = [lt[0] for lt in d.lemma_stream[start : start + 10]]
+        if not window:
+            continue
+        by_class = {
+            t: [w for w in window if index.fl.lemma_type(w) == t] for t in classes
+        }
+        words = []
+        for _ in range(int(rng.integers(2, 5))):
+            t = classes[int(rng.choice(len(classes), p=weights))]
+            pool = by_class[t] or window  # window lacks the class: any word
+            words.append(pool[int(rng.integers(len(pool)))])
+        queries.append(" ".join(words))
+    return queries
+
+
+def _percentiles(latencies_s):
+    if not latencies_s:
+        return {"p50_ms": 0.0, "p99_ms": 0.0, "p999_ms": 0.0}
+    arr = np.asarray(latencies_s, dtype=np.float64) * 1e3
+    return {
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p99_ms": float(np.percentile(arr, 99)),
+        "p999_ms": float(np.percentile(arr, 99.9)),
+    }
+
+
+def _rates(pairs):
+    n = max(1, len(pairs))
+    partial = sum(1 for _, r in pairs if r.stats.partial)
+    shed = sum(1 for t, r in pairs if r.stats.shed or t.shed_at_queue)
+    return {"partial_rate": partial / n, "shed_rate": shed / n}
+
+
+def run_throughput_ratio(store, index, queries, *, max_batch=8):
+    """Deterministic batched-vs-serial throughput — the gated ratio.
+
+    Fixed slates of ``max_batch`` requests through the §15 batched
+    pipeline (``search_many``) vs one-at-a-time ``search``, each on a
+    fresh frontend, each run twice: the untimed first pass compiles every
+    (pow2-bucketed) program shape into the process-wide jit cache, the
+    second pass measures steady state.  Slate composition is a pure
+    function of the seeded query list, so the compiled shapes — and hence
+    the ratio — are stable run to run, unlike the racy threaded loop
+    whose batch compositions depend on scheduler interleaving.
+    """
+
+    def batched_qps():
+        fe = ServingFrontend(index, lemmatizer=store.lemmatizer,
+                             max_batch=max_batch)
+        reqs = [SearchRequest(q, top_k=10) for q in queries]
+        t0 = time.perf_counter()
+        for lo in range(0, len(reqs), max_batch):
+            fe.search_many(reqs[lo : lo + max_batch])
+        dt = time.perf_counter() - t0
+        return len(reqs) / dt if dt > 0 else 0.0
+
+    def serial_qps():
+        fe = ServingFrontend(index, lemmatizer=store.lemmatizer,
+                             max_batch=max_batch)
+        t0 = time.perf_counter()
+        for q in queries:
+            fe.search(q, top_k=10)
+        dt = time.perf_counter() - t0
+        return len(queries) / dt if dt > 0 else 0.0
+
+    batched_qps()  # warm-up: compile slate shapes
+    serial_qps()  # warm-up: compile single-query shapes
+    b, s = batched_qps(), serial_qps()
+    return {
+        "requests": len(queries),
+        "batched_qps": b,
+        "serial_qps": s,
+        "qps_ratio": b / s if s > 0 else 0.0,
+    }
+
+
+def run_closed_loop(store, index, queries, *, clients=6, per_client=8,
+                    max_batch=8):
+    """C clients, one outstanding request each, resubmit on completion.
+    Real threads, real clock: reported for QPS/latency/occupancy, not
+    gated (batch composition is scheduler-dependent)."""
+    frontend = ServingFrontend(index, lemmatizer=store.lemmatizer,
+                               max_batch=max_batch)
+    daemon = ServiceDaemon(frontend, max_queue=4 * clients).start()
+    pairs: list[list] = [[] for _ in range(clients)]
+    errors: list[BaseException] = []
+    start = threading.Barrier(clients + 1)
+
+    def client(c):
+        try:
+            start.wait()
+            for i in range(per_client):
+                q = queries[(c * per_client + i) % len(queries)]
+                t = daemon.submit(SearchRequest(q, top_k=10))
+                pairs[c].append((t, t.result(timeout=300.0)))
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(clients)]
+    for t in threads:
+        t.start()
+    start.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    daemon.stop()
+    flat = [p for per in pairs for p in per]
+    m = daemon.metrics()
+    n = len(flat)
+    return {
+        "clients": clients,
+        "requests": n,
+        "errors": len(errors),
+        "sustained_qps": n / elapsed if elapsed > 0 else 0.0,
+        **_percentiles([t.latency_sec for t, _ in flat]),
+        **_rates(flat),
+        "mean_batch_occupancy": m["mean_batch_occupancy"],
+        "batch_occupancy_hist": m["batch_occupancy_hist"],
+    }, flat
+
+
+def make_open_schedule(queries, *, target_qps, n_requests, seed,
+                       deadline_frac=0.25, deadline_sec=0.05):
+    """Seeded Poisson arrivals at ``target_qps``; a ``deadline_frac``
+    slice of requests carries a deadline, a third of those a ZERO budget
+    (guaranteed flagged partials: the shed-flagging gate has teeth)."""
+    rng = np.random.default_rng(seed + 1)
+    t, events = 0.0, []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / target_qps))
+        d = None
+        if rng.random() < deadline_frac:
+            d = 0.0 if rng.random() < (1.0 / 3.0) else deadline_sec
+        events.append((t, SearchRequest(queries[i % len(queries)], top_k=10,
+                                        deadline_sec=d)))
+    return events
+
+
+def run_open_loop(store, index, schedule, *, max_batch=8, max_queue=32):
+    """Pace the seeded schedule in real time through the started daemon."""
+    frontend = ServingFrontend(index, lemmatizer=store.lemmatizer,
+                               max_batch=max_batch)
+    daemon = ServiceDaemon(frontend, max_queue=max_queue).start()
+    t0 = time.perf_counter()
+    tickets = []
+    for at, req in schedule:
+        now = time.perf_counter() - t0
+        if at > now:
+            time.sleep(at - now)
+        tickets.append(daemon.submit(req))
+    pairs = [(t, t.result(timeout=300.0)) for t in tickets]
+    elapsed = time.perf_counter() - t0
+    daemon.stop()
+    m = daemon.metrics()
+    n = len(pairs)
+    offered = n / schedule[-1][0] if schedule and schedule[-1][0] > 0 else 0.0
+    return {
+        "requests": n,
+        "offered_qps": offered,
+        "sustained_qps": n / elapsed if elapsed > 0 else 0.0,
+        **_percentiles([t.latency_sec for t, _ in pairs]),
+        **_rates(pairs),
+        "mean_batch_occupancy": m["mean_batch_occupancy"],
+        "batch_occupancy_hist": m["batch_occupancy_hist"],
+        "queue_sheds": m["shed_queue"],
+    }, pairs
+
+
+def run_replay(store, index, schedule, *, max_batch=8, service_time_sec=0.02):
+    """The same schedule on a virtual clock: exact, machine-independent
+    occupancy (every run of a seed yields the identical batch sequence)."""
+    clock = ManualClock()
+    frontend = ServingFrontend(index, lemmatizer=store.lemmatizer,
+                               max_batch=max_batch, clock=clock)
+    daemon = ServiceDaemon(frontend, clock=clock, max_queue=4096)
+    tickets = daemon.replay(schedule, service_time_sec=service_time_sec)
+    m = daemon.metrics()
+    pairs = [(t, t.result(timeout=0)) for t in tickets]
+    return {
+        "requests": len(tickets),
+        "service_time_sec": service_time_sec,
+        "batches": m["batches"],
+        "mean_batch_occupancy": m["mean_batch_occupancy"],
+        "batch_occupancy_hist": m["batch_occupancy_hist"],
+        **_rates(pairs),
+    }, pairs
+
+
+def check_exactness(store, index, sampled_pairs, *, max_batch=8):
+    """Differential gate: sampled responses vs a fresh single-frontend
+    reference.  No-deadline responses must be byte-identical; ANY
+    divergent response must be flagged (partial/shed)."""
+    reference = ServingFrontend(index, lemmatizer=store.lemmatizer,
+                                max_batch=max_batch)
+
+    def key(resp):
+        return [
+            (d.doc_id, d.score, [(f.doc_id, f.start, f.end) for f in d.fragments])
+            for d in resp.docs
+        ]
+
+    sampled = mismatches = unflagged = flagged_divergent = 0
+    for t, resp in sampled_pairs:
+        want = reference.search(t.request.query, top_k=t.request.top_k)
+        sampled += 1
+        if key(resp) == key(want):
+            continue
+        flagged = bool(resp.stats.partial or resp.stats.shed or t.shed_at_queue)
+        if not flagged:
+            unflagged += 1
+        if t.request.deadline_sec is None and not t.shed_at_queue:
+            mismatches += 1  # no budget, not shed: divergence is a bug
+        elif flagged:
+            flagged_divergent += 1
+    return {
+        "sampled": sampled,
+        "mismatches": mismatches,
+        "unflagged_divergence": unflagged,
+        "flagged_divergent": flagged_divergent,
+    }
+
+
+def bench_traffic(quick=False, seed=29):
+    """The full traffic profile: closed loop + open loop + virtual replay
+    + exactness sampling, as recorded in ``BENCH_traffic.json``."""
+    n_docs = 60 if quick else 120
+    store, index = build_stack(n_docs=n_docs, seed=seed)
+    queries = make_query_mix(store, index, 24 if quick else 48, seed)
+
+    throughput = run_throughput_ratio(store, index, queries)
+
+    clients = 4 if quick else 6
+    per_client = 6 if quick else 10
+    closed, closed_pairs = run_closed_loop(
+        store, index, queries, clients=clients, per_client=per_client
+    )
+
+    n_open = 24 if quick else 60
+    schedule = make_open_schedule(
+        queries, target_qps=40.0, n_requests=n_open, seed=seed
+    )
+    open_loop, open_pairs = run_open_loop(store, index, schedule)
+
+    replay_schedule = [
+        (i * 0.002, SearchRequest(queries[i % len(queries)], top_k=10))
+        for i in range(32 if quick else 64)
+    ]
+    replay, replay_pairs = run_replay(store, index, replay_schedule)
+
+    rng = np.random.default_rng(seed + 2)
+    pool = closed_pairs + open_pairs + replay_pairs
+    idx = rng.choice(len(pool), size=min(32, len(pool)), replace=False)
+    exactness = check_exactness(store, index, [pool[int(i)] for i in idx])
+
+    return {
+        "config": {
+            "seed": seed,
+            "quick": bool(quick),
+            "n_docs": n_docs,
+            "n_queries": len(queries),
+            "class_weights": {t.name: w for t, w in CLASS_WEIGHTS.items()},
+        },
+        "throughput": throughput,
+        "closed_loop": closed,
+        "open_loop": open_loop,
+        "replay": replay,
+        "exactness": exactness,
+    }
+
+
+def traffic_gates(results, committed=None):
+    """The CI gate table (benchmarks/README.md): returns CSV-row tuples
+    ``(name, value, detail)`` for every violated gate — empty when green."""
+    failures = []
+    ex = results["exactness"]
+    if ex["mismatches"]:
+        failures.append(("traffic_results_MISMATCH", ex["mismatches"],
+                         f"sampled={ex['sampled']}"))
+    if ex["unflagged_divergence"]:
+        failures.append(("traffic_shed_UNFLAGGED", ex["unflagged_divergence"],
+                         f"sampled={ex['sampled']}"))
+    occ = results["replay"]["mean_batch_occupancy"]
+    if occ <= 1.0:
+        failures.append(("traffic_occupancy_GATE", f"{occ:.2f}",
+                         "replay occupancy must exceed 1 at saturation"))
+    if results["closed_loop"]["errors"]:
+        failures.append(("traffic_client_ERRORS",
+                         results["closed_loop"]["errors"], "closed loop"))
+    if committed is not None:
+        committed_ratio = committed.get("throughput", {}).get("qps_ratio")
+        ratio = results["throughput"]["qps_ratio"]
+        # SAME-RUN ratio (batched vs serial on this machine, this run,
+        # warm jit cache, deterministic slates) vs the committed ratio:
+        # machine speed cancels, so 0.5x is a real regression, not noise
+        if committed_ratio is not None and ratio < 0.5 * committed_ratio:
+            failures.append(("traffic_qps_REGRESSION", f"{ratio:.2f}",
+                             f"committed_ratio={committed_ratio:.2f};gate=0.5x"))
+    return failures
+
+
+def print_rows(results):
+    c, o, r = results["closed_loop"], results["open_loop"], results["replay"]
+    t = results["throughput"]
+    print(f"traffic_throughput_ratio,{t['qps_ratio']:.2f},"
+          f"batched_qps={t['batched_qps']:.1f};serial_qps={t['serial_qps']:.1f}")
+    print(f"traffic_closed_qps,{c['sustained_qps']:.1f},"
+          f"clients={c['clients']};p50_ms={c['p50_ms']:.1f};"
+          f"p99_ms={c['p99_ms']:.1f};p999_ms={c['p999_ms']:.1f};"
+          f"occupancy={c['mean_batch_occupancy']:.2f}")
+    print(f"traffic_open_qps,{o['sustained_qps']:.1f},"
+          f"offered={o['offered_qps']:.1f};p50_ms={o['p50_ms']:.1f};"
+          f"p99_ms={o['p99_ms']:.1f};p999_ms={o['p999_ms']:.1f};"
+          f"partial_rate={o['partial_rate']:.2f};shed_rate={o['shed_rate']:.2f}")
+    print(f"traffic_replay_occupancy,{r['mean_batch_occupancy']:.2f},"
+          f"batches={r['batches']};requests={r['requests']}")
+    ex = results["exactness"]
+    print(f"traffic_exactness,{ex['sampled']},"
+          f"mismatches={ex['mismatches']};"
+          f"unflagged={ex['unflagged_divergence']};"
+          f"flagged_divergent={ex['flagged_divergent']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short deterministic profile (the CI traffic step)")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write the profile to this path (BENCH_traffic.json)")
+    ap.add_argument("--seed", type=int, default=29)
+    args = ap.parse_args()
+
+    committed_path = Path(__file__).parent.parent / "BENCH_traffic.json"
+    committed = None
+    if committed_path.exists():
+        try:
+            committed = json.loads(committed_path.read_text())
+        except json.JSONDecodeError:
+            pass
+
+    print("name,value,detail")
+    results = bench_traffic(quick=args.smoke, seed=args.seed)
+    print_rows(results)
+    failures = traffic_gates(results, committed=committed)
+    for name, value, detail in failures:
+        print(f"{name},{value},{detail}")
+    if args.json is not None:
+        args.json.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"# wrote {args.json}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,9 @@ human-readable table; roofline sections read the dry-run artifacts.
 path vs fused query-at-a-time batch) in ``BENCH_serving.json``, the
 indexing/persistence numbers in ``BENCH_indexing.json``, and the §14
 resilience numbers (recovery time, degraded p50/p99, the seeded
-chaos-differential gate) in ``BENCH_robustness.json``.
+chaos-differential gate) in ``BENCH_robustness.json``, and the §16 serving
+daemon's traffic profile (closed/open-loop QPS, tail latency, batch
+occupancy, exactness sampling) in ``BENCH_traffic.json``.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json]
 """
@@ -20,6 +22,11 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
+from benchmarks.load import (  # noqa: E402
+    bench_traffic,
+    print_rows as print_traffic_rows,
+    traffic_gates,
+)
 from benchmarks.paper_tables import (  # noqa: E402
     bench_algorithms,
     bench_arena,
@@ -288,6 +295,29 @@ def main() -> None:
         out_path = Path(__file__).parent.parent / "BENCH_robustness.json"
         out_path.write_text(json.dumps(robustness, indent=2) + "\n")
         print(f"# wrote {out_path}")
+
+    # ---- §16 serving daemon under load: traffic profile + gates -------------
+    committed_traffic_path = Path(__file__).parent.parent / "BENCH_traffic.json"
+    committed_traffic = None
+    if committed_traffic_path.exists():
+        try:
+            committed_traffic = json.loads(committed_traffic_path.read_text())
+        except json.JSONDecodeError:
+            pass
+    traffic = bench_traffic(quick=args.quick)
+    print_traffic_rows(traffic)
+    # CI gates (benchmarks/README.md): sampled daemon responses must match
+    # the single-frontend reference or carry a partial/shed flag; the virtual
+    # replay must show continuous batching (occupancy > 1); and the SAME-RUN
+    # batched-vs-serial QPS ratio must stay within 2x of the committed one
+    traffic_failures = traffic_gates(traffic, committed=committed_traffic)
+    for name, value, detail in traffic_failures:
+        print(f"{name},{value},{detail}")
+    if traffic_failures:
+        sys.exit(1)
+    if args.json:
+        committed_traffic_path.write_text(json.dumps(traffic, indent=2) + "\n")
+        print(f"# wrote {committed_traffic_path}")
 
     # ---- roofline (from dry-run artifacts, if present) ----------------------
     try:

@@ -23,6 +23,15 @@ Useful flags:
                       build, no re-lemmatization; otherwise build the
                       corpus once and snapshot into the directory so the
                       NEXT run warm-starts (the crash-recovery loop);
+* ``--daemon``        serve over the network (DESIGN.md §16): start the
+                      continuous-batching :class:`ServiceDaemon` behind the
+                      JSON-lines TCP transport and run until Ctrl-C;
+                      ``--port`` picks the listen port (0 = ephemeral,
+                      printed on startup), ``--replicas`` the number of
+                      frontend replicas sharing the index lineage;
+* ``--connect``       be the client instead: send ``--queries`` to a
+                      running ``--daemon`` at HOST:PORT and print the wire
+                      responses (no corpus build on this side);
 * ``--chaos-seed``    serve under a seeded fault schedule (DESIGN.md §14):
                       shard crashes/kills, straggler delays, snapshot
                       bit-flips fire deterministically at the §14 injection
@@ -104,6 +113,18 @@ def main() -> None:
                          "deterministic shard crashes/kills, stragglers and "
                          "snapshot bit-flips, detected and recovered by the "
                          "resilience layer (recovery needs --snapshot-dir)")
+    ap.add_argument("--daemon", action="store_true",
+                    help="serve over TCP through the §16 continuous-batching "
+                         "daemon until interrupted (frontend mode only)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="TCP listen port for --daemon (0 = ephemeral, "
+                         "printed on startup)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="frontend replicas behind the --daemon queue "
+                         "(round-robin routed, one shared index lineage)")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="client mode: send --queries to a running --daemon "
+                         "and print the wire responses")
     ap.add_argument("--arena-budget-mb", type=float, default=64.0,
                     help="device-resident posting arena byte budget "
                          "(DESIGN.md §13; 0 disables — frontend mode only): "
@@ -114,6 +135,32 @@ def main() -> None:
 
     import time
     from pathlib import Path
+
+    if args.connect:
+        from ..search.service import request_over_tcp
+
+        host, _, port = args.connect.rpartition(":")
+        address = (host or "127.0.0.1", int(port))
+        for q in args.queries * args.repeat:
+            payload = {"query": q, "top_k": args.top_k}
+            if args.deadline_ms is not None:
+                payload["deadline_ms"] = args.deadline_ms
+            out = request_over_tcp(address, payload)
+            flags = [f for f in ("partial", "shed") if out.get(f)]
+            tag = f"  [{', '.join(f.upper() for f in flags)}]" if flags else ""
+            print(f"\nquery: {out['query']!r}  "
+                  f"(batch_size={out.get('batch_size')}, "
+                  f"replica={out.get('replica')}, "
+                  f"wait={1e3 * (out.get('queue_wait_sec') or 0):.1f} ms){tag}")
+            for d in out["docs"]:
+                frags = ", ".join(f"[{s},{e}]" for _, s, e in d["fragments"][:4])
+                print(f"  doc {d['doc_id']:5d} score={d['score']:.4f} "
+                      f"fragments: {frags}")
+        m = request_over_tcp(address, {"op": "metrics"})["metrics"]
+        print(f"\ndaemon: {m['completed']} completed, {m['shed_queue']} shed, "
+              f"{m['batches']} batches, "
+              f"mean occupancy {m['mean_batch_occupancy']:.2f}")
+        return
 
     from ..index.corpus import synthesize_corpus
     from ..search.distributed import ShardedSearchService
@@ -210,6 +257,38 @@ def main() -> None:
     warm = frontend.warmup(queries=args.queries, top_k=args.top_k)
     print(f"warmup: precompiled {warm['programs']} device program(s) in "
           f"{warm['seconds'] * 1000:.0f} ms (cold p99 excludes jit compile)")
+
+    if args.daemon:
+        from ..search.service import ServiceDaemon, serve_tcp
+
+        replicas = [frontend] + [
+            ServingFrontend(
+                svc,
+                default_deadline_sec=deadline,
+                arena_budget_mb=args.arena_budget_mb,
+            )
+            for _ in range(max(1, args.replicas) - 1)
+        ]
+        daemon = ServiceDaemon(replicas)
+        server = serve_tcp(daemon, port=args.port)
+        host, port = server.address
+        print(f"daemon: {len(replicas)} replica(s) listening on {host}:{port}")
+        print(f"  try:  python -m repro.launch.serve --connect {host}:{port} "
+              f"--queries 'who are you who'")
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.shutdown()
+            server.server_close()
+            daemon.stop()
+            m = daemon.metrics()
+            print(f"\ndaemon: {m['completed']} completed, "
+                  f"{m['shed_queue']} shed, {m['batches']} batches, "
+                  f"mean occupancy {m['mean_batch_occupancy']:.2f}")
+        return
     if args.explain:
         for q in args.queries:
             print(frontend.planner.plan(q).explain())

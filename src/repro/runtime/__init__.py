@@ -1,4 +1,12 @@
+from .clock import ManualClock, SystemClock
 from .fault_tolerance import RestartPolicy, run_with_restarts, StragglerMonitor
 from .elastic import ElasticTopology
 
-__all__ = ["RestartPolicy", "run_with_restarts", "StragglerMonitor", "ElasticTopology"]
+__all__ = [
+    "RestartPolicy",
+    "run_with_restarts",
+    "StragglerMonitor",
+    "ElasticTopology",
+    "ManualClock",
+    "SystemClock",
+]

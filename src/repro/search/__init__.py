@@ -2,6 +2,7 @@ from .engine import SearchEngine, RankedDoc, QueryResponse
 from .frontend import PostingCache, SearchRequest, ServingFrontend
 from .planner import KeyBinding, QueryPlan, QueryPlanner, SubqueryPlan, execute_plans
 from .relevance import fragment_score, rank_documents
+from .service import ServiceDaemon, Ticket, request_over_tcp, serve_tcp
 
 __all__ = [
     "SearchEngine",
@@ -17,4 +18,8 @@ __all__ = [
     "ServingFrontend",
     "SearchRequest",
     "PostingCache",
+    "ServiceDaemon",
+    "Ticket",
+    "serve_tcp",
+    "request_over_tcp",
 ]

@@ -146,7 +146,7 @@ class ShardedSearchService:
         if resilience is not None or injector is not None:
             self.enable_resilience(policy=resilience, injector=injector)
 
-    def enable_resilience(self, policy=None, injector=None):
+    def enable_resilience(self, policy=None, injector=None, clock=None):
         """Switch the fan-out onto the §14 failure path (DESIGN.md §14).
 
         Installs a :class:`~repro.search.resilience.ShardSupervisor`: every
@@ -154,9 +154,13 @@ class ShardedSearchService:
         retries/hedges, snapshot recovery) before packing the surviving
         shards into the usual single fused dispatch.  Idempotent-ish:
         calling again replaces the supervisor but keeps an existing
-        injector unless a new one is passed.  Returns the supervisor.
-        Fragments are exact-or-flagged either way — the supervisor decides
-        *which shards* serve, never what a shard returns.
+        injector unless a new one is passed.  ``clock=`` (§16.4) threads
+        an injectable clock through the supervisor, its breakers and the
+        injector's straggler delays — a virtual clock makes every timing
+        decision (hedge, cooldown, backoff) an exact-tick comparison.
+        Returns the supervisor.  Fragments are exact-or-flagged either
+        way — the supervisor decides *which shards* serve, never what a
+        shard returns.
         """
         from .resilience import FaultInjector, ShardSupervisor
 
@@ -164,7 +168,8 @@ class ShardedSearchService:
             self.injector = injector
         elif self.injector is None:
             self.injector = FaultInjector()
-        self.supervisor = ShardSupervisor(self, policy=policy, injector=self.injector)
+        self.supervisor = ShardSupervisor(self, policy=policy, injector=self.injector,
+                                          clock=clock)
         if self.arena is not None:
             self.arena.injector = self.injector
         return self.supervisor

@@ -60,6 +60,7 @@ from ..core.lemma import Lemmatizer
 from ..core.postings import QueryStats
 from ..index.builder import IndexSet
 from ..index.incremental import generation_token
+from ..runtime.clock import SystemClock
 from .planner import QueryPlan, QueryPlanner, SubqueryPlan, execute_plans, resolve_index_views
 
 __all__ = ["SearchRequest", "ServingFrontend", "PostingCache"]
@@ -193,8 +194,13 @@ class ServingFrontend:
         max_inflight: int | None = None,
         shed_deadline_sec: float = 0.0,
         pipeline: bool = True,
+        clock=None,
     ):
         self._source = source
+        # injectable clock (DESIGN.md §16.4): every deadline/EWMA timing in
+        # this frontend reads it, so tests drive a ManualClock to exact
+        # tick boundaries while production (SystemClock) is unchanged
+        self.clock = clock or SystemClock()
         self.max_batch = max(1, int(max_batch))
         # two-deep micro-batch pipeline (DESIGN.md §15.2): overlap batch
         # N+1's plan/pack/H2D with batch N's device compute.  Responses are
@@ -303,6 +309,25 @@ class ServingFrontend:
         chunks of ``max_batch`` and each chunk runs as ONE fused device
         dispatch.  Responses come back in request order, each trimmed to its
         own request's ``top_k``.
+        """
+        return self.submit_many(requests)()
+
+    def submit_many(self, requests: Sequence[SearchRequest | str]):
+        """Submit a slate and return a zero-arg ``finalize`` callable.
+
+        The continuous-batching hook (DESIGN.md §16.2): ALL pre-dispatch
+        work — the §14 probe barrier, cache lookups, planning, deadline
+        admission, shedding, residency acquisition — runs now, and the
+        first micro-batch chunk is SUBMITTED to the device without being
+        awaited (``pipeline=True``; with ``pipeline=False`` it runs to
+        completion, the serial reference).  Calling the returned finalize
+        performs the blocking readout (plus any remaining chunks, two-deep
+        pipelined) and returns the responses.  ``search_many`` is exactly
+        ``submit_many(requests)()`` — responses are byte-identical, in
+        request order — which is what lets ``search/service.py`` admit new
+        requests into its queue while this slate's device program is in
+        flight.  Not thread-safe per frontend: one submitted slate must be
+        finalized before the next is submitted (the daemon serializes).
         """
         reqs = [
             r if isinstance(r, SearchRequest) else SearchRequest(query=r)
@@ -413,7 +438,7 @@ class ServingFrontend:
             chunk_admitted = miss_admitted[lo:hi]
             chunk_reqs = [reqs[i] for i in miss_idx[lo:hi]]
             top_k = max((r.top_k for r in chunk_reqs), default=10)
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
             out = execute_plans(
                 chunk_plans,
                 cached_views,
@@ -432,7 +457,7 @@ class ServingFrontend:
             lo, chunk_plans, chunk_admitted, t0, out = state
             if self.pipeline:
                 out = out()  # blocking readout + response build
-            elapsed = time.perf_counter() - t0
+            elapsed = self.clock.now() - t0
             self._calibrate(chunk_admitted, elapsed)
             for j, resp in enumerate(out):
                 i = miss_idx[lo + j]
@@ -467,17 +492,30 @@ class ServingFrontend:
                         self._result_cache.popitem(last=False)
                 responses[i] = resp
 
-        inflight = None
-        for lo in range(0, len(miss_idx), self.max_batch):
-            state = _submit(lo)
+        chunk_los = list(range(0, len(miss_idx), self.max_batch))
+        # submit the FIRST chunk now (enqueue-only under pipeline=True): by
+        # the time submit_many returns, the device is already computing it
+        inflight = _submit(chunk_los[0]) if chunk_los else None
+
+        done = False
+
+        def finalize() -> list:
+            nonlocal inflight, done
+            if done:  # idempotent, like PendingBatch.result()
+                return responses
+            for lo in chunk_los[1:]:
+                state = _submit(lo)
+                _finish(inflight)
+                inflight = state
             if inflight is not None:
                 _finish(inflight)
-            inflight = state
-        if inflight is not None:
-            _finish(inflight)
-        for dup, first in aliases:
-            responses[dup] = self._from_cache(responses[first])
-        return responses
+                inflight = None
+            for dup, first in aliases:
+                responses[dup] = self._from_cache(responses[first])
+            done = True
+            return responses
+
+        return finalize
 
     def close(self) -> None:
         """Release this frontend's hold on long-lived state (DESIGN.md

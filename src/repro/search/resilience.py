@@ -41,6 +41,7 @@ from typing import Sequence
 import numpy as np
 
 from ..core.postings import QueryStats
+from ..runtime.clock import SystemClock
 from ..runtime.fault_tolerance import RestartPolicy
 
 __all__ = [
@@ -128,9 +129,15 @@ class FaultInjector:
     ones, so there is ONE failure path, not two.
     """
 
-    def __init__(self, schedule: Sequence[FaultEvent] = (), seed: int = 0):
+    def __init__(self, schedule: Sequence[FaultEvent] = (), seed: int = 0,
+                 clock=None):
         self.seed = seed
         self.schedule = tuple(schedule)
+        # §16.4: straggler delays sleep on THIS clock — under a virtual
+        # clock an injected delay advances shared virtual time instantly,
+        # so hedge/deadline tests see the exact scheduled latency without
+        # a real sleep.
+        self.clock = clock or SystemClock()
         self._arrivals: dict[tuple, int] = {}
         self.down: set[int] = set()  # killed shards (until revive())
         self._held: set[int] = set()  # legacy dead_shards= routing (scoped)
@@ -236,7 +243,7 @@ class FaultInjector:
                 raise ShardCrash(shard, transient=False, point=point)
             if ev.kind == "delay" and attempt == 0:
                 self._log(ev, shard=shard, arrival=n)
-                time.sleep(ev.delay_s)
+                self.clock.sleep(ev.delay_s)
             elif ev.kind == "bitflip" and path is not None:
                 if self._bitflip(path, ev, n):
                     self._log(ev, shard=shard, arrival=n, path=str(path))
@@ -434,14 +441,23 @@ class ShardSupervisor:
         policy: ResiliencePolicy | None = None,
         injector: FaultInjector | None = None,
         health: HealthMonitor | None = None,
+        clock=None,
     ):
         self.service = service
         self.policy = policy or ResiliencePolicy()
         self.injector = injector or FaultInjector()
+        # §16.4: one timeline for the whole barrier — probe latency
+        # brackets, backoff sleeps, breaker cooldowns and injected
+        # straggler delays all read/advance the same clock, so a virtual
+        # clock makes the hedge decision an exact-tick comparison.
+        self.clock = clock or SystemClock()
+        if clock is not None:
+            self.injector.clock = self.clock
         self.health = health or HealthMonitor(
             service.n_shards,
             breaker_errors=self.policy.breaker_errors,
             cooldown_s=self.policy.breaker_cooldown_s,
+            clock=self.clock,
         )
         self.recoveries = 0
         self.last_excluded: frozenset[int] = frozenset()
@@ -484,15 +500,15 @@ class ShardSupervisor:
         attempt = 0
         while True:
             try:
-                t0 = time.perf_counter()
+                t0 = self.clock.now()
                 self._touch(shard, attempt, stats)
-                self.health.record_success(shard, time.perf_counter() - t0)
+                self.health.record_success(shard, self.clock.now() - t0)
                 return True
             except ShardCrash as e:
                 self.health.record_error(shard)
                 if e.transient and attempt < self.policy.restart.max_restarts:
                     stats.retries += 1
-                    time.sleep(self.policy.restart.backoff(attempt))
+                    self.clock.sleep(self.policy.restart.backoff(attempt))
                     attempt += 1
                     continue
                 return self.recover_shard(shard, stats)
@@ -501,6 +517,20 @@ class ShardSupervisor:
         hedge = self.policy.hedge_after_s
         if hedge is None:
             self._touch_once(shard, attempt)
+            return
+        if getattr(self.clock, "virtual", False):
+            # deterministic hedge path (§16.4): under a virtual clock the
+            # primary probe runs to completion synchronously — an injected
+            # straggler delay advances virtual time instead of sleeping —
+            # and the hedge fires iff the primary's virtual elapsed exceeds
+            # the threshold, exactly as the threaded race would decide it
+            # (attempt+1 skips the injected delay, modelling the replica).
+            # No threads, so the tick accounting is exact and replayable.
+            t0 = self.clock.now()
+            self._touch_once(shard, attempt)
+            if self.clock.now() - t0 > hedge:
+                stats.hedges += 1
+                self._touch_once(shard, attempt + 1)
             return
         import concurrent.futures as cf
 

@@ -106,6 +106,56 @@ def make_queries(seed: int, spec: CorpusSpec, n_queries: int = 4) -> list[str]:
 
 
 @dataclass
+class ArrivalSpec:
+    """A drawn open-loop arrival schedule for the §16 queue tests.
+
+    ``events`` are ``(arrival_time_sec, query, top_k, deadline_sec|None)``
+    in time order — bursty (several arrivals can share an instant) with a
+    mixed deadline population (none / generous / tight / zero); replayed
+    on a virtual clock via ``ServiceDaemon.replay``.
+    ``service_time_sec`` is the drawn virtual per-batch service time.
+    """
+
+    events: list[tuple]
+    service_time_sec: float
+
+
+def make_arrival_schedule(
+    seed: int, queries: list[str], max_events: int = 24
+) -> ArrivalSpec:
+    """Deterministically expand ``seed`` into an :class:`ArrivalSpec`.
+
+    Inter-arrival gaps mix zero (bursts: QPS spikes that must queue behind
+    an in-flight batch) with short pauses; deadlines mix ``None`` (never
+    sheds work), generous (admits everything), tight (forces partials) and
+    zero (admits nothing).  Equal seeds produce equal schedules under both
+    hypothesis and the fixed-seed shim.
+    """
+    rng = np.random.default_rng(seed ^ 0xA5A5_A5A5)
+    n = int(rng.integers(3, max_events + 1))
+    t = 0.0
+    events: list[tuple] = []
+    for _ in range(n):
+        if rng.random() < 0.55:  # else: same-instant burst
+            t += float(rng.uniform(0.0005, 0.012))
+        q = queries[int(rng.integers(len(queries)))]
+        top_k = int(rng.choice([3, 10, 1000]))
+        r = rng.random()
+        if r < 0.55:
+            deadline = None
+        elif r < 0.75:
+            deadline = float(rng.uniform(0.5, 2.0))
+        elif r < 0.92:
+            deadline = float(rng.uniform(1e-4, 5e-3))
+        else:
+            deadline = 0.0
+        events.append((t, q, top_k, deadline))
+    return ArrivalSpec(
+        events=events, service_time_sec=float(rng.uniform(0.001, 0.01))
+    )
+
+
+@dataclass
 class OpSequence:
     """A randomized add/delete/compact schedule for the incremental tests."""
 

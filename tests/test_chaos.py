@@ -29,6 +29,7 @@ from repro.core.oracle import oracle_search
 from repro.core.postings import SearchResult
 from repro.index import DocumentStore, build_indexes
 from repro.index.incremental import index_sets_equal
+from repro.runtime.clock import ManualClock
 from repro.runtime.fault_tolerance import RestartPolicy
 from repro.search.arena import PostingArena
 from repro.search.distributed import ShardedSearchService
@@ -76,7 +77,7 @@ def _fast_policy(**kw):
     return ResiliencePolicy(**kw)
 
 
-def _build_stack(tmp_path, chaos_seed=None, snapshot=True, **policy_kw):
+def _build_stack(tmp_path, chaos_seed=None, snapshot=True, clock=None, **policy_kw):
     spec = make_corpus(CORPUS_SEED, max_docs=10)
     store = DocumentStore.from_texts(spec.texts)
     full_index = build_indexes(
@@ -103,7 +104,8 @@ def _build_stack(tmp_path, chaos_seed=None, snapshot=True, **policy_kw):
         if chaos_seed is not None
         else None
     )
-    svc.enable_resilience(policy=_fast_policy(**policy_kw), injector=injector)
+    svc.enable_resilience(policy=_fast_policy(**policy_kw), injector=injector,
+                          clock=clock)
     return svc, queries, oracles
 
 
@@ -272,8 +274,13 @@ def test_transient_crash_retries_then_serves_exact(tmp_path):
 
 
 def test_straggler_hedge_keeps_shard_and_exactness(tmp_path):
+    """Hedge decision on a virtual clock (§16.4): the injected 0.2 s
+    straggler delay advances virtual time past the 0.02 s hedge threshold
+    — no real sleep, no thread race — and the whole run costs EXACTLY the
+    injected delay, assertable as a tick boundary."""
+    clock = ManualClock()
     svc, queries, oracles = _build_stack(
-        tmp_path, snapshot=False, hedge_after_s=0.02
+        tmp_path, snapshot=False, hedge_after_s=0.02, clock=clock
     )
     svc.injector.schedule = (
         FaultEvent("shard.straggler", "delay", shard=2, at_call=0, delay_s=0.2),
@@ -281,8 +288,29 @@ def test_straggler_hedge_keeps_shard_and_exactness(tmp_path):
     resp = svc.search_batch(queries[:1], top_k=TOP_K)[0]
     assert resp.stats.hedges == 1 and resp.stats.shards_degraded == 0
     assert _response_frags(resp) == oracles[queries[0]]
+    # exact tick boundary: the ONLY time that passed in the entire serving
+    # round is the one injected straggler delay
+    assert clock.peek() == 0.2
     # the slow probe still landed in the latency window for MAD detection
     assert svc.supervisor.health.probes > 0
+
+
+def test_straggler_below_hedge_threshold_never_hedges(tmp_path):
+    """The complementary tick boundary: a delay UNDER the hedge threshold
+    must not fire the hedge, and virtual time advances by exactly that
+    delay (§16.4 determinism — the decision is an exact comparison, not a
+    thread race)."""
+    clock = ManualClock()
+    svc, queries, oracles = _build_stack(
+        tmp_path, snapshot=False, hedge_after_s=0.02, clock=clock
+    )
+    svc.injector.schedule = (
+        FaultEvent("shard.straggler", "delay", shard=2, at_call=0, delay_s=0.01),
+    )
+    resp = svc.search_batch(queries[:1], top_k=TOP_K)[0]
+    assert resp.stats.hedges == 0 and resp.stats.shards_degraded == 0
+    assert _response_frags(resp) == oracles[queries[0]]
+    assert clock.peek() == 0.01
 
 
 def test_arena_pressure_falls_back_to_host_exactly(tmp_path):

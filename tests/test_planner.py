@@ -22,6 +22,7 @@ from repro.core.keys import EXECUTABLE_FAMILIES, expand_subqueries, select_keys
 from repro.core.lemma import LemmaType
 from repro.core.oracle import oracle_search
 from repro.index import DocumentStore, IncrementalIndexer, build_indexes
+from repro.runtime.clock import ManualClock
 from repro.search import fused
 from repro.search.distributed import ShardedSearchService
 from repro.search.engine import SearchEngine
@@ -210,8 +211,10 @@ def test_result_cache_invalidated_after_commit_and_compact(incremental_frontend)
 
 
 def test_deadline_zero_budget_is_empty_partial(small_index, lemmatizer):
+    # ManualClock (§16.4): deadline behavior is hermetic — calibration
+    # sees zero elapsed and the budget comparison is pure arithmetic
     frontend = ServingFrontend(
-        small_index, lemmatizer=lemmatizer, calibrate=False
+        small_index, lemmatizer=lemmatizer, clock=ManualClock()
     )
     resp = frontend.search("who are you who", top_k=8, deadline_sec=0.0)
     assert resp.stats.partial
@@ -228,7 +231,10 @@ def test_deadline_early_exit_is_correctly_ranked_partial(small_index, lemmatizer
     frontend = ServingFrontend(
         small_index,
         lemmatizer=lemmatizer,
-        calibrate=False,
+        # ManualClock (§16.4): zero elapsed per batch, so calibration never
+        # moves the 1-posting/sec estimate between the two searches below —
+        # admission is exactly arithmetic on est_postings, no wall clock
+        clock=ManualClock(),
         postings_per_sec=1.0,  # 1 posting per second: any budget is tight
     )
     query = "who are you who"
@@ -259,6 +265,27 @@ def _as_results(frags):
     from repro.core.postings import SearchResult
 
     return [SearchResult(doc_id=d, start=s, end=e) for d, s, e in frags]
+
+
+def test_ewma_calibration_is_exact_on_tick_clock(small_index, lemmatizer):
+    """EWMA throughput calibration under ``ManualClock(tick=t)``: the
+    elapsed between a chunk's submit and finish readings is exactly one
+    tick, so the post-batch estimate equals
+    ``0.5*prior + 0.5*(admitted_postings / t)`` as pure arithmetic — the
+    §16.4 exact-tick contract (previously untestable without sleeping)."""
+    tick = 0.25
+    prior = 1000.0
+    frontend = ServingFrontend(
+        small_index,
+        lemmatizer=lemmatizer,
+        clock=ManualClock(tick=tick),
+        postings_per_sec=prior,
+    )
+    plan = frontend.planner.plan("who are you who")
+    postings = sum(sp.est_postings for sp in plan.executable())
+    assert postings > 0
+    frontend.search("who are you who", top_k=8)
+    assert frontend.postings_per_sec == 0.5 * prior + 0.5 * (postings / tick)
 
 
 def test_mixed_top_k_requests_each_get_their_own_cut(small_index, lemmatizer):

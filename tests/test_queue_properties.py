@@ -1,0 +1,228 @@
+"""Property-based queue tests for the §16 continuous-batching daemon.
+
+Random arrival schedules (``tests/strategies.make_arrival_schedule``: QPS
+bursts, mixed deadline populations) replayed on a virtual clock, asserting
+the DESIGN.md §16.2 invariants:
+
+* **admission order** — batches are formed FIFO from consecutive tickets,
+  retire FIFO, and no ticket is ever starved or lost
+  (``submitted == completed + shed_queue`` conservation);
+* **byte-identity** — a single-replica daemon's responses are identical
+  (docs, scores, fragments, flags) to a serial
+  ``ServingFrontend.search_many`` run over the same slates with the same
+  effective deadlines;
+* **shed/partial flagging** — queue-overflow sheds are flagged
+  (``stats.shed`` / ``partial``), empty, and never cached: re-serving the
+  same query under no pressure returns the full exact result;
+* **continuous batching** — arrivals during an in-flight batch form the
+  next batch (mean occupancy > 1 on a saturating schedule).
+
+Runs under real hypothesis or the fixed-seed shim; every example is a
+deterministic function of its drawn seed (virtual clock, no sleeps).
+"""
+
+from __future__ import annotations
+
+from tests._hypothesis_compat import given, settings
+from tests.strategies import make_arrival_schedule, make_corpus, make_queries, seeds
+
+from repro.index import DocumentStore, build_indexes
+from repro.runtime.clock import ManualClock
+from repro.search.frontend import SearchRequest, ServingFrontend
+from repro.search.service import ServiceDaemon
+
+MAX_BATCH = 4
+
+
+def _build_index(seed):
+    spec = make_corpus(seed, max_docs=8)
+    store = DocumentStore.from_texts(spec.texts)
+    index = build_indexes(
+        store,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+    )
+    queries = make_queries(seed, spec, n_queries=4)
+    return index, queries
+
+
+def _frontend(index, **kw):
+    kw.setdefault("max_batch", MAX_BATCH)
+    kw.setdefault("clock", ManualClock())
+    return ServingFrontend(index, **kw)
+
+
+def _daemon(index, **kw):
+    clock = ManualClock()
+    fe = _frontend(index, clock=clock)
+    kw.setdefault("max_queue", 64)
+    return ServiceDaemon(fe, clock=clock, **kw)
+
+
+def _replay(daemon, spec):
+    schedule = [
+        (t, SearchRequest(query=q, top_k=k, deadline_sec=d))
+        for t, q, k, d in spec.events
+    ]
+    return daemon.replay(schedule, service_time_sec=spec.service_time_sec)
+
+
+def _batches(tickets):
+    """Reconstruct launched batches: non-shed tickets in seq order, taken
+    in runs of their recorded batch_size (FIFO pops consecutive seqs)."""
+    served = sorted((t for t in tickets if not t.shed_at_queue), key=lambda t: t.seq)
+    out, i = [], 0
+    while i < len(served):
+        size = served[i].batch_size
+        assert size >= 1
+        out.append(served[i : i + size])
+        i += size
+    return out
+
+
+def _doc_key(resp):
+    return [
+        (d.doc_id, d.score, [(f.doc_id, f.start, f.end) for f in d.fragments])
+        for d in resp.docs
+    ]
+
+
+@given(seeds)
+@settings(max_examples=5, deadline=None, derandomize=True)
+def test_daemon_is_byte_identical_to_serial_reference(seed):
+    """Single replica: for ANY arrival schedule, replaying through the
+    daemon yields responses identical to a serial search_many run over the
+    reconstructed slates with the recorded effective deadlines."""
+    index, queries = _build_index(seed)
+    spec = make_arrival_schedule(seed, queries, max_events=14)
+    daemon = _daemon(index)
+    tickets = _replay(daemon, spec)
+    assert all(t.done() for t in tickets)
+
+    reference = _frontend(index)  # fresh caches, same config
+    for batch in _batches(tickets):
+        expected = reference.search_many(
+            [
+                SearchRequest(
+                    query=t.request.query,
+                    top_k=t.request.top_k,
+                    deadline_sec=t.effective_deadline_sec,
+                )
+                for t in batch
+            ]
+        )
+        for t, want in zip(batch, expected):
+            got = t.result(timeout=0)
+            assert _doc_key(got) == _doc_key(want), (t.request.query, t.seq)
+            assert got.stats.partial == want.stats.partial
+            assert got.stats.results == want.stats.results
+
+
+@given(seeds)
+@settings(max_examples=5, deadline=None, derandomize=True)
+def test_admission_order_no_starvation_and_conservation(seed):
+    """FIFO batches over consecutive seqs, every ticket completed, and the
+    exact submitted == completed + shed_queue conservation law."""
+    index, queries = _build_index(seed)
+    spec = make_arrival_schedule(seed, queries, max_events=18)
+    daemon = _daemon(index, max_queue=6)  # small queue: sheds can occur
+    tickets = _replay(daemon, spec)
+
+    assert all(t.done() for t in tickets), "a ticket was starved"
+    seq_cursor = -1
+    for batch in _batches(tickets):
+        batch_seqs = [t.seq for t in batch]
+        # consecutive among served tickets and globally ascending: FIFO
+        assert batch_seqs == sorted(batch_seqs)
+        assert batch_seqs[0] > seq_cursor
+        seq_cursor = batch_seqs[-1]
+        assert len(batch) <= daemon.batch_limit
+        assert all(t.replica == batch[0].replica for t in batch)
+
+    m = daemon.metrics()
+    assert m["submitted"] == len(tickets)
+    assert m["submitted"] == m["completed"] + m["shed_queue"]
+    assert m["queued"] == 0 and m["inflight_requests"] == 0
+    assert m["batched_requests"] == m["completed"]
+
+
+@given(seeds)
+@settings(max_examples=5, deadline=None, derandomize=True)
+def test_sheds_and_partials_are_flagged_and_never_cached(seed):
+    """Every response that is not the complete exact result carries a flag
+    (shed / partial), queue-sheds are empty, and no flagged response is
+    ever served back out of the result cache."""
+    index, queries = _build_index(seed)
+    spec = make_arrival_schedule(seed, queries, max_events=18)
+    daemon = _daemon(index, max_queue=3)
+    tickets = _replay(daemon, spec)
+
+    for t in tickets:
+        resp = t.result(timeout=0)
+        if t.shed_at_queue:
+            assert resp.stats.shed == 1 and resp.stats.partial
+            assert resp.docs == [] and resp.stats.cache_hits == 0
+        if resp.stats.partial:
+            # flagged responses must never have come from the cache
+            assert resp.stats.cache_hits == 0
+
+    # never cached: re-serving a query that was shed (or partial) under no
+    # pressure yields the frontend's full exact result, not a cached stub
+    flagged = [
+        t for t in tickets if t.result(timeout=0).stats.partial
+    ]
+    if flagged:
+        q = flagged[0].request.query
+        top_k = flagged[0].request.top_k
+        again = daemon.submit(SearchRequest(query=q, top_k=top_k))
+        daemon.drain()
+        resp = again.result(timeout=0)
+        want = _frontend(index).search(q, top_k=top_k)
+        assert resp.stats.shed == 0 and not resp.stats.partial
+        assert _doc_key(resp) == _doc_key(want)
+
+
+def test_saturating_burst_batches_continuously():
+    """Deterministic saturation: arrivals every 1 ms against a 10 ms
+    virtual service time MUST form multi-request batches from arrivals
+    admitted while earlier batches were in flight — mean occupancy > 1 is
+    the §16.2 continuous-batching evidence (exact, not statistical)."""
+    index, queries = _build_index(7)
+    daemon = _daemon(index)
+    schedule = [
+        (i * 0.001, SearchRequest(query=queries[i % len(queries)], top_k=10))
+        for i in range(12)
+    ]
+    tickets = daemon.replay(schedule, service_time_sec=0.010)
+    assert all(t.done() for t in tickets)
+    m = daemon.metrics()
+    assert m["mean_batch_occupancy"] > 1.0, m
+    assert m["batches"] < len(tickets)
+    # and the queue wait the late arrivals paid is an exact virtual-time
+    # quantity: ticket 1 arrived at 1 ms and launched when batch 0 retired
+    # at 10 ms -> exactly 9 ms of queue wait
+    assert tickets[1].queue_wait_sec == 0.010 - 0.001
+
+
+def test_multi_replica_round_robin_serves_all_exactly():
+    """Two replicas over one index: batches alternate replicas, every
+    response equals the single-frontend reference exactly, and both
+    replicas actually served (the routing property)."""
+    index, queries = _build_index(11)
+    clock = ManualClock()
+    replicas = [
+        ServingFrontend(index, max_batch=2, clock=clock) for _ in range(2)
+    ]
+    daemon = ServiceDaemon(replicas, clock=clock, max_queue=64)
+    schedule = [
+        (i * 0.0005, SearchRequest(query=queries[i % len(queries)], top_k=10))
+        for i in range(10)
+    ]
+    tickets = daemon.replay(schedule, service_time_sec=0.002)
+    reference = ServingFrontend(index, max_batch=2, clock=ManualClock())
+    for t in tickets:
+        want = reference.search(t.request.query, top_k=10)
+        assert _doc_key(t.result(timeout=0)) == _doc_key(want)
+    m = daemon.metrics()
+    assert all(n > 0 for n in m["per_replica_batches"]), m
