@@ -28,11 +28,13 @@ from benchmarks.load import (  # noqa: E402
     traffic_gates,
 )
 from benchmarks.paper_tables import (  # noqa: E402
+    INGEST_SPEEDUP_GATE,
     bench_algorithms,
     bench_arena,
     bench_duplicates,
     bench_frontend,
     bench_indexing,
+    bench_ingest,
     bench_overlap,
     bench_persistence,
     bench_robustness,
@@ -229,6 +231,39 @@ def main() -> None:
     if not indexing["results_match_rebuild"]:
         print(f"indexing_results_MISMATCH,0,{indexing['mismatch_reason']}")
         sys.exit(1)
+
+    # ---- §17 external-memory bulk ingest ------------------------------------
+    ingest = bench_ingest(
+        quick=args.quick,
+        artifact_dir=(Path(__file__).parent.parent / "artifacts"
+                      / "ingest_spills") if args.json else None,
+    )
+    print(f"ingest_bulk,{ingest['bulk']['sec']*1e6:.0f},"
+          f"docs_per_sec={ingest['bulk']['docs_per_sec']:.1f};"
+          f"lemmatize_s={ingest['bulk']['lemmatize_s']:.2f};"
+          f"spill_s={ingest['bulk']['spill_s']:.2f};"
+          f"merge_s={ingest['bulk']['merge_s']:.2f};"
+          f"spill_bytes={ingest['bulk']['spill_bytes']}")
+    print(f"ingest_full_build_same_run,"
+          f"{ingest['full_build_same_run']['sec']*1e6:.0f},"
+          f"docs_per_sec={ingest['full_build_same_run']['docs_per_sec']:.1f};"
+          f"same_run_ratio={ingest['speedup_same_run']:.2f}")
+    # CI gates (benchmarks/README.md): the published bulk snapshot must be
+    # index_sets_equal to the in-RAM build (exactness first), and bulk
+    # throughput must clear 10x the frozen pre-§17 full-build figure
+    if not ingest["ingest_equality"]:
+        print(f"ingest_equality_GATE,0,{ingest['mismatch_reason']}")
+        sys.exit(1)
+    if ingest["speedup_vs_seed_full_build"] < INGEST_SPEEDUP_GATE:
+        print(f"ingest_speedup_GATE,0,"
+              f"speedup={ingest['speedup_vs_seed_full_build']:.2f};"
+              f"gate={INGEST_SPEEDUP_GATE}x_vs_"
+              f"{ingest['seed_full_build_docs_per_sec']}_docs_per_sec")
+        sys.exit(1)
+    print(f"ingest_speedup,{ingest['bulk']['sec']*1e6:.0f},"
+          f"vs_seed_full_build={ingest['speedup_vs_seed_full_build']:.2f}x;"
+          f"gate={INGEST_SPEEDUP_GATE}x")
+    indexing["ingest"] = ingest
 
     # ---- durable index store: snapshot / restore / compression --------------
     persistence = bench_persistence(quick=args.quick)

@@ -147,10 +147,24 @@ class Lemmatizer:
         self._exceptions = dict(_EXCEPTIONS)
         if extra_exceptions:
             self._exceptions.update(extra_exceptions)
+        # Rules are pure per-word-form, so memoize: corpora repeat word forms
+        # heavily (Zipf), and bulk ingest lemmatizes millions of tokens.
+        self._memo: dict[str, tuple[str, ...]] = dict(self._exceptions)
 
     def lemmas(self, word: str) -> tuple[str, ...]:
-        """All lemmas of ``word`` (multi-valued, like the paper's dictionary)."""
+        """All lemmas of ``word`` (multi-valued, like the paper's dictionary).
+
+        Memoized — the suffix rules run once per distinct word form.
+        """
         w = word.lower()
+        hit = self._memo.get(w)
+        if hit is not None:
+            return hit
+        out = self._lemmas_uncached(w)
+        self._memo[w] = out
+        return out
+
+    def _lemmas_uncached(self, w: str) -> tuple[str, ...]:
         if w in self._exceptions:
             return self._exceptions[w]
         if len(w) <= 3 or w.endswith("ss"):
@@ -173,7 +187,21 @@ class Lemmatizer:
 
     def lemmatize_text(self, text: str) -> list[tuple[str, ...]]:
         """Per-token lemma tuples for a document."""
-        return [self.lemmas(tok) for tok in tokenize(text)]
+        memo = self._memo
+        uncached = self._lemmas_uncached
+        out = []
+        for tok in tokenize(text):
+            hit = memo.get(tok)
+            if hit is None:
+                hit = memo[tok] = uncached(tok)
+            out.append(hit)
+        return out
+
+    def lemmatize_texts(self, texts: Sequence[str]) -> list[list[tuple[str, ...]]]:
+        """Batched ingestion path: lemmatize many documents, resolving each
+        DISTINCT word form once across the whole batch (the memo makes the
+        marginal document a dict-lookup loop, not a suffix-rule loop)."""
+        return [self.lemmatize_text(t) for t in texts]
 
     def first_lemma_text(self, text: str) -> list[str]:
         """Indexing view: the paper indexes every lemma of every occurrence;
@@ -212,7 +240,12 @@ class FLList:
         ordered = sorted(freq.items(), key=lambda kv: (-kv[1], kv[0]))
         lemmas = [l for l, _ in ordered]
         fl = {l: i for i, l in enumerate(lemmas)}
-        return cls(lemmas=lemmas, fl_number=fl, frequency=dict(freq),
+        # store frequencies in FL order, not the caller's accumulation order:
+        # serialized snapshots (DESIGN.md §12.2/§17.4) must be byte-identical
+        # no matter how the counts were reduced (corpus scan, per-shard
+        # merge, spill-chunk counters)
+        return cls(lemmas=lemmas, fl_number=fl,
+                   frequency={l: freq[l] for l in lemmas},
                    sw_count=sw_count, fu_count=fu_count)
 
     def lemma_type(self, lemma: str) -> LemmaType:

@@ -448,6 +448,7 @@ class IncrementalIndexer:
         lemmatizer: Lemmatizer | None = None,
         build_pair: bool = True,
         build_degenerate: bool = True,
+        use_fast_builder: bool = True,
     ):
         self.sw_count = sw_count
         self.fu_count = fu_count
@@ -455,6 +456,10 @@ class IncrementalIndexer:
         self.lemmatizer = lemmatizer or Lemmatizer()
         self.build_pair = build_pair
         self.build_degenerate = build_degenerate
+        # commit() routes segment construction through the vectorized
+        # builder (§17.1) by default; the scalar build_segment stays the
+        # oracle the property/differential suites compare against
+        self.use_fast_builder = use_fast_builder
         self.fl: FLList | None = None
         self.segments: list[Segment] = []
         self.tombstones: set[int] = set()
@@ -575,6 +580,54 @@ class IncrementalIndexer:
             injector=injector,
         )
 
+    @classmethod
+    def bulk_build(
+        cls,
+        texts: Sequence[str] | None = None,
+        *,
+        out_dir,
+        sw_count: int,
+        fu_count: int,
+        max_distance: int = 5,
+        build_pair: bool = True,
+        build_degenerate: bool = True,
+        documents: Sequence[Document] | None = None,
+        doc_ids: Sequence[int] | None = None,
+        fl: FLList | None = None,
+        docs_per_spill: int = 64,
+        workers: int = 1,
+        resume: bool = False,
+        keep_spills: bool = False,
+        injector=None,
+        lemmatizer: Lemmatizer | None = None,
+    ) -> tuple["IncrementalIndexer", "object"]:
+        """External-memory cold build (§17): SPIMI spill/merge straight to a
+        published §12.2 snapshot, then warm-start an indexer from it.  The
+        result is byte-identical to ``snapshot()`` after a one-commit build of
+        the same corpus (the §17.4 determinism contract), but an order of
+        magnitude faster because postings never round-trip through Python
+        dicts.  Returns ``(indexer, BulkBuildStats)``."""
+        from .ingest import bulk_build as _bulk_build
+
+        stats = _bulk_build(
+            texts,
+            out_dir=out_dir,
+            sw_count=sw_count,
+            fu_count=fu_count,
+            max_distance=max_distance,
+            build_pair=build_pair,
+            build_degenerate=build_degenerate,
+            documents=documents,
+            doc_ids=doc_ids,
+            fl=fl,
+            docs_per_spill=docs_per_spill,
+            workers=workers,
+            resume=resume,
+            keep_spills=keep_spills,
+            injector=injector,
+        )
+        return cls.restore(out_dir, lemmatizer=lemmatizer), stats
+
     # -- ingest / delete ----------------------------------------------------
 
     def add_documents(
@@ -677,7 +730,11 @@ class IncrementalIndexer:
 
         batch = rekeyed + new_docs
         if batch:
-            seg_index = build_segment(
+            if self.use_fast_builder:
+                from .fastbuild import build_segment_fast as _builder
+            else:
+                _builder = build_segment
+            seg_index = _builder(
                 batch,
                 new_fl,
                 max_distance=self.max_distance,
@@ -722,7 +779,6 @@ class IncrementalIndexer:
         if not changed:
             return [], 0
 
-        unknown_to_old = {l for l in changed if l not in old_fl.fl_number}
         rekeyed: list[Document] = []
         for seg in self.segments:
             live = seg.doc_ids - self.tombstones - seg.superseded
@@ -731,11 +787,16 @@ class IncrementalIndexer:
                 lemmas = self._doc_lemmas[doc_id]
                 if not (lemmas & changed):
                     continue
-                # a doc indexed under a pinned FL that lacked some of its
-                # lemmas was built with sentinel rank ties — always re-key
-                if lemmas & unknown_to_old or lemma_order_signature(
-                    lemmas, old_fl
-                ) != lemma_order_signature(lemmas, new_fl):
+                # the signature IS the invariance condition: it orders
+                # sentinel-tied (FL-unknown) lemmas deterministically by
+                # string and carries each lemma's type, so comparing it
+                # re-keys exactly the docs whose rows could differ — a
+                # lemma merely ENTERING the FL list (e.g. under a pinned
+                # shard-global FL) does not re-key docs whose relative
+                # order and types are unchanged
+                if lemma_order_signature(lemmas, old_fl) != lemma_order_signature(
+                    lemmas, new_fl
+                ):
                     seg.superseded.add(doc_id)
                     rekeyed.append(doc)
 

@@ -93,6 +93,26 @@ FAMILY_WIDTH = POSTING_WIDTH
 _FAMILIES = tuple(FAMILY_WIDTH)
 
 
+def _savez_deterministic(buf, arrays: dict) -> None:
+    """``np.savez`` with pinned zip metadata: fixed DOS timestamp, fixed
+    permissions, no compression.  Equal arrays -> equal bytes, which is the
+    property the §17.4 determinism contract (bulk-ingest runs with different
+    worker counts produce byte-identical snapshots) rests on — stock
+    ``np.savez`` stamps each member with the wall clock."""
+    import io
+    import zipfile
+
+    from numpy.lib import format as npformat
+
+    with zipfile.ZipFile(buf, "w", zipfile.ZIP_STORED) as zf:
+        for name, arr in arrays.items():
+            member = io.BytesIO()
+            npformat.write_array(member, np.asanyarray(arr), allow_pickle=False)
+            info = zipfile.ZipInfo(name + ".npy", date_time=(1980, 1, 1, 0, 0, 0))
+            info.external_attr = 0o600 << 16
+            zf.writestr(info, member.getvalue())
+
+
 def _write_durable(path: Path, data: bytes) -> None:
     """Write + flush + fsync one data file (§12.4): every payload file is
     durable BEFORE the manifest fsync that publishes it, so a
@@ -524,7 +544,7 @@ def write_segment_store(
     _write_durable(path / _POSTINGS_BLOB, bytes(blob))
     _write_durable(path / _NSW_BLOB, bytes(nsw_blob))
     keys_buf = io.BytesIO()
-    np.savez(keys_buf, **key_table)
+    _savez_deterministic(keys_buf, key_table)
     keys_bytes = keys_buf.getvalue()
     _write_durable(path / _KEYS_FILE, keys_bytes)
     manifest = {

@@ -108,6 +108,14 @@ def main() -> None:
     ap.add_argument("--snapshot-dir", default=None,
                     help="warm start from (or bootstrap) a durable index "
                          "snapshot directory (DESIGN.md §12)")
+    ap.add_argument("--bulk-ingest", action="store_true",
+                    help="cold-start through the §17 external-memory SPIMI "
+                         "pipeline: shards spill+merge straight to disk "
+                         "under --snapshot-dir (required) instead of "
+                         "building in RAM, then serve from the published "
+                         "snapshot — byte-identical to the in-RAM build")
+    ap.add_argument("--bulk-workers", type=int, default=1,
+                    help="spill worker processes for --bulk-ingest")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="serve under the §14 seeded fault schedule: "
                          "deterministic shard crashes/kills, stragglers and "
@@ -196,6 +204,27 @@ def main() -> None:
         ]
         if ignored:
             print("note: warm start ignores build flags: " + ", ".join(ignored))
+    if svc is None and args.bulk_ingest:
+        if not args.snapshot_dir:
+            ap.error("--bulk-ingest needs --snapshot-dir (the spill/merge "
+                     "pipeline publishes a §12.2 snapshot tree)")
+        print(f"bulk ingest: corpus ({args.n_docs} docs) -> "
+              f"{args.n_shards} shard stores under {args.snapshot_dir}...")
+        t0 = time.perf_counter()
+        store = synthesize_corpus(n_docs=args.n_docs, seed=7)
+        svc, stats = ShardedSearchService.bulk_ingest(
+            store, args.snapshot_dir, n_shards=args.n_shards,
+            sw_count=args.sw_count, fu_count=args.fu_count,
+            max_distance=args.max_distance, algorithm=args.algorithm,
+            workers=args.bulk_workers,
+        )
+        n_docs = sum(s.n_docs for s in stats)
+        total_s = time.perf_counter() - t0
+        print(f"bulk ingest: {n_docs} docs / {len(stats)} shards in "
+              f"{total_s * 1000:.0f} ms "
+              f"({sum(s.spill_bytes for s in stats) / 1024:.0f} KB spilled, "
+              f"{n_docs / total_s:.0f} docs/s incl. corpus synthesis); "
+              f"rerun to warm-start")
     if svc is None:
         print(f"building corpus ({args.n_docs} docs) and {args.n_shards} index shards...")
         t0 = time.perf_counter()

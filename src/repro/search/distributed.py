@@ -371,6 +371,81 @@ class ShardedSearchService:
         svc._next_doc_id = max(ix._next_id for ix in svc.indexers)
         return svc
 
+    @classmethod
+    def bulk_ingest(
+        cls,
+        store: DocumentStore,
+        directory,
+        n_shards: int,
+        sw_count: int,
+        fu_count: int,
+        max_distance: int = 5,
+        algorithm: str = "se2.4",
+        workers: int = 1,
+        docs_per_spill: int = 64,
+        resume: bool = False,
+        injector=None,
+    ) -> tuple["ShardedSearchService", list]:
+        """External-memory cold start (DESIGN.md §17): SPIMI bulk-build every
+        shard straight to its ``shard_<i>/snap_<N>`` store, then publish
+        ``service.json`` and warm-start from disk.
+
+        The FL-list is the same corpus-level reduce ``commit()`` broadcasts,
+        pinned into every shard's build, so the published tree is
+        byte-identical to ``ShardedSearchService(store, ...,
+        incremental=True).snapshot(directory)`` (the §17.4 determinism
+        contract) — but postings never round-trip through Python dicts.
+        Returns ``(service, [BulkBuildStats per shard])``.
+        """
+        from pathlib import Path
+
+        from ..checkpoint import fsync_json
+        from ..core.lemma import FLList
+        from ..index.ingest import bulk_build
+        from ..index.store import FORMAT_VERSION
+
+        directory = Path(directory)
+        directory.mkdir(parents=True, exist_ok=True)
+        fl = FLList.from_frequencies(
+            store.lemma_frequencies(), sw_count=sw_count, fu_count=fu_count
+        )
+        stats = []
+        shard_snapshots = []
+        for i, sub in enumerate(shard_documents(store, n_shards)):
+            st = bulk_build(
+                out_dir=directory / f"shard_{i:02d}",
+                sw_count=sw_count,
+                fu_count=fu_count,
+                max_distance=max_distance,
+                documents=sub.documents,
+                fl=fl,
+                docs_per_spill=docs_per_spill,
+                workers=workers,
+                resume=resume,
+                injector=injector,
+            )
+            stats.append(st)
+            shard_snapshots.append(
+                int(Path(st.snapshot_path).name.rsplit("_", 1)[1])
+            )
+        # same publish order as snapshot(): manifest LAST, atomically — a
+        # reader that finds service.json finds complete shard stores
+        manifest_tmp = directory / "service.json.tmp"
+        fsync_json(manifest_tmp, {
+            "format_version": FORMAT_VERSION,
+            "kind": "service",
+            "shard_snapshots": shard_snapshots,
+            "n_shards": n_shards,
+            "sw_count": sw_count,
+            "fu_count": fu_count,
+            "max_distance": max_distance,
+            "algorithm": algorithm,
+            "use_kernel": False,
+            "doc_len": 512,
+        })
+        manifest_tmp.replace(directory / "service.json")
+        return cls.restore(directory, lemmatizer=store.lemmatizer), stats
+
     def search(
         self, query: str, top_k: int = 10, dead_shards: Sequence[int] = ()
     ) -> QueryResponse:

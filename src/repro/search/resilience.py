@@ -122,7 +122,17 @@ class FaultInjector:
     ``shard.commit``      service ``commit`` loop  ``crash``, ``kill``
     ``store.load_snapshot``  ``store.load_snapshot``  ``bitflip``
     ``arena.acquire``     ``PostingArena``         ``overflow``
+    ``ingest.lemmatize``  bulk ingest, per chunk   ``crash``, ``kill``
+    ``ingest.spill``      bulk ingest, per chunk   ``crash``, ``kill``
+    ``ingest.merge``      bulk ingest merge open   ``bitflip`` (on the
+                                                   chunk's spill store)
     ====================  =======================  =========================
+
+    The ``ingest.*`` points (§17) fire with ``shard=`` set to the CHUNK id
+    and, for ``ingest.merge``, ``path=`` to the chunk directory so a
+    ``bitflip`` physically corrupts that spill's ``seg_*/postings.bin`` —
+    the merge's CRC verification and the resume re-spill are exercised
+    against real corruption, not mocks (``tests/test_ingest_faults.py``).
 
     The legacy ``dead_shards=`` simulation argument routes through
     :meth:`hold_down` — held shards fail their probes exactly like killed

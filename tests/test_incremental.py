@@ -136,6 +136,59 @@ def test_fl_drift_rekeys_only_affected_docs():
     _assert_equal_rebuild(ix, "class flip")
 
 
+def test_fl_refresh_skips_docs_with_unchanged_signature():
+    """Regression: a lemma merely ENTERING the FL list (unknown under the
+    old generation, e.g. a pinned shard-global FL that lagged the corpus)
+    must not re-key docs whose lemma order signature is unchanged — the
+    sentinel tie-break already ordered those lemmas by string, so their
+    rows are byte-identical under both generations."""
+    from repro.core.lemma import FLList
+
+    fl0 = FLList.from_frequencies({"the": 100, "walk": 50},
+                                  sw_count=1, fu_count=1)
+    ix = IncrementalIndexer(sw_count=1, fu_count=1, max_distance=D)
+    ix.add_documents(["walk qux zebra"])
+    ix.commit(fl=fl0)  # qux/zebra unknown to fl0: sentinel FL-numbers
+    # the refreshed FL now knows qux/zebra — same relative order, same types
+    fl1 = FLList.from_frequencies(
+        {"the": 100, "walk": 50, "qux": 2, "zebra": 1}, sw_count=1, fu_count=1
+    )
+    report = ix.commit(fl=fl1)
+    assert report["rekeyed_docs"] == 0, "signature-invariant doc was re-keyed"
+    rebuild = build_indexes(
+        ix.surviving_store(), sw_count=1, fu_count=1, max_distance=D, fl=fl1
+    )
+    equal, why = index_sets_equal(ix.index.to_index_set(), rebuild)
+    assert equal, why
+
+
+def test_fl_refresh_rekeys_exactly_signature_changed_docs():
+    """The re-key set equals {committed docs whose lemma_order_signature
+    changed between generations} — no over- or under-approximation."""
+    from repro.core.keys import lemma_order_signature
+    from repro.core.lemma import FLList
+
+    texts, lem = _texts()
+    ix = IncrementalIndexer(sw_count=SW, fu_count=FU, max_distance=D,
+                            lemmatizer=lem)
+    ix.add_documents(texts[:16])
+    ix.commit()
+    old_fl = ix.fl
+    ix.add_documents(texts[16:] + ["zeta " * 40])  # force drift
+    new_fl = FLList.from_frequencies(
+        ix.surviving_frequencies(), sw_count=SW, fu_count=FU
+    )
+    expected = sum(
+        lemma_order_signature(ix._doc_lemmas[doc_id], old_fl)
+        != lemma_order_signature(ix._doc_lemmas[doc_id], new_fl)
+        for doc_id in ix.documents
+    )
+    report = ix.commit(fl=new_fl)
+    assert report["rekeyed_docs"] == expected
+    assert 0 < expected < len(ix.documents)  # a real partial re-key
+    _assert_equal_rebuild(ix, "exact re-key set")
+
+
 def test_segmented_view_serves_all_key_arities(small_corpus):
     texts = [d.text for d in small_corpus.documents]
     ix = IncrementalIndexer(

@@ -1,0 +1,137 @@
+"""Crash/corruption tests for §17 bulk ingest (§14 injection points,
+§12.2 CRC rejection).
+
+A bulk run may die at any of the three ingest injection points
+(``ingest.lemmatize`` / ``ingest.spill`` / ``ingest.merge``) or find its
+on-disk spill cache torn or bit-flipped.  The contract under test:
+
+* a crash leaves only durable prefixes — ``resume=True`` revalidates by
+  CRC, redoes exactly the invalid work, and the finished snapshot is
+  **byte-identical** to an uncrashed run's;
+* physical corruption (truncation, bit-flip) is *rejected*, never merged:
+  either the resume path rebuilds the bad spill or the merge fails cleanly
+  with ``StoreError`` and no snapshot is published.
+
+No real sleeps anywhere — faults fire deterministically by arrival count.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import pytest
+
+from repro.index.ingest import bulk_build
+from repro.index.store import StoreError
+from repro.search.resilience import FaultEvent, FaultInjector, ShardCrash
+
+SW, FU = 8, 16
+TEXTS = [
+    f"doc {i} the who are you who walk to be or not to be w{i % 7:03d}"
+    for i in range(12)
+]
+DPS = 4  # -> 3 chunks
+
+
+def _tree_bytes(root: Path) -> dict[str, bytes]:
+    return {
+        str(p.relative_to(root)): p.read_bytes()
+        for p in sorted(Path(root).rglob("*"))
+        if p.is_file()
+    }
+
+
+def _build(out, injector=None, resume=False, **kw):
+    return bulk_build(
+        TEXTS, out_dir=out, sw_count=SW, fu_count=FU,
+        docs_per_spill=DPS, injector=injector, resume=resume, **kw,
+    )
+
+
+def _assert_equals_uncrashed(out, tmp_path):
+    ref = tmp_path / "uncrashed_ref"
+    _build(ref)
+    got, want = _tree_bytes(Path(out) / "snap_0"), _tree_bytes(ref / "snap_0")
+    assert set(got) == set(want)
+    diff = [k for k in sorted(got) if got[k] != want[k]]
+    assert not diff, f"resumed snapshot differs from uncrashed: {diff}"
+
+
+def test_crash_mid_spill_then_resume_is_byte_identical(tmp_path):
+    out = tmp_path / "out"
+    inj = FaultInjector([FaultEvent("ingest.spill", "crash", shard=1)])
+    with pytest.raises(ShardCrash):
+        _build(out, injector=inj)
+    # the crash aborted before publish: no snapshot, but durable chunks
+    assert not list(out.glob("snap_*"))
+    assert (out / "ingest_run" / "chunk_0000" / "chunk.json").exists()
+    stats = _build(out, resume=True)
+    # every chunk survived phase L; spill 0 completed before the crash
+    assert stats.chunks_reused == 3 and stats.spills_reused == 1
+    _assert_equals_uncrashed(out, tmp_path)
+
+
+def test_crash_mid_lemmatize_then_resume_is_byte_identical(tmp_path):
+    out = tmp_path / "out"
+    inj = FaultInjector([FaultEvent("ingest.lemmatize", "crash", shard=2)])
+    with pytest.raises(ShardCrash):
+        _build(out, injector=inj)
+    stats = _build(out, resume=True)
+    assert stats.chunks_reused == 2  # chunks 0,1 durable; chunk 2 redone
+    _assert_equals_uncrashed(out, tmp_path)
+
+
+def test_fresh_run_ignores_crashed_leftovers(tmp_path):
+    """Without resume=True a partial run is discarded, never continued —
+    the leftover could be from an incompatible invocation."""
+    out = tmp_path / "out"
+    inj = FaultInjector([FaultEvent("ingest.spill", "crash", shard=0)])
+    with pytest.raises(ShardCrash):
+        _build(out, injector=inj)
+    stats = _build(out)  # resume NOT requested
+    assert stats.chunks_reused == 0 and stats.spills_reused == 0
+    _assert_equals_uncrashed(out, tmp_path)
+
+
+def test_bitflip_spill_is_rejected_and_nothing_published(tmp_path):
+    """A bit-flipped spill segment must fail the §12.2 CRC verify inside the
+    merge — a clean StoreError, not silently-wrong postings — and the run
+    must not publish a snapshot."""
+    out = tmp_path / "out"
+    inj = FaultInjector([FaultEvent("ingest.merge", "bitflip", shard=1)])
+    with pytest.raises(StoreError):
+        _build(out, injector=inj)
+    assert inj.log and inj.log[0]["kind"] == "bitflip"
+    assert not list(out.glob("snap_*"))
+    # the corruption is recoverable: resume revalidates spills by CRC,
+    # rebuilds the poisoned one and completes
+    stats = _build(out, resume=True)
+    assert stats.spills_reused == 2  # chunks 0,2 intact; chunk 1 rebuilt
+    _assert_equals_uncrashed(out, tmp_path)
+
+
+def test_truncated_spill_is_rebuilt_on_resume(tmp_path):
+    """Torn write (power loss mid-spill): spills are unsynced caches, so a
+    truncated blob must be caught by CRC validation and rebuilt."""
+    out = tmp_path / "out"
+    inj = FaultInjector([FaultEvent("ingest.merge", "crash", shard=0)])
+    with pytest.raises(ShardCrash):
+        _build(out, injector=inj)  # dies entering the merge: all spills on disk
+    victim = out / "ingest_run" / "chunk_0001" / "seg_000" / "postings.bin"
+    blob = victim.read_bytes()
+    victim.write_bytes(blob[: len(blob) // 2])
+    stats = _build(out, resume=True)
+    assert stats.chunks_reused == 3 and stats.spills_reused == 2
+    _assert_equals_uncrashed(out, tmp_path)
+
+
+def test_crashed_resumed_equals_uncrashed_with_workers(tmp_path):
+    """The resume path composes with multiprocess spilling: a run crashed
+    under the injector, resumed with workers=2, still lands on the
+    byte-identical tree (worker count never leaks into the §17.4 bytes)."""
+    out = tmp_path / "out"
+    inj = FaultInjector([FaultEvent("ingest.spill", "crash", shard=2)])
+    with pytest.raises(ShardCrash):
+        _build(out, injector=inj)
+    _build(out, resume=True, workers=2)
+    _assert_equals_uncrashed(out, tmp_path)

@@ -1,0 +1,203 @@
+"""Property-based suite for the §17 external-memory (SPIMI) bulk ingest.
+
+Three layers of the pipeline are pinned against their in-RAM oracles over
+the shared ``tests/strategies`` corpora (runs under real ``hypothesis`` or
+the fixed-seed shim alike):
+
+* ``build_segment_fast`` == scalar ``build_segment`` (the vectorized
+  candidate builder is a pure reimplementation of §3's per-doc scan);
+* ``_write_spill_fast`` == ``write_segment_store(build_segment_fast(...))``
+  **byte for byte** — the raw spill writer skips the key->rows dict
+  round-trip but must land on the identical §12.1 encoded store;
+* ``bulk_build`` over random spill boundaries and worker counts ==
+  ``build_indexes`` over the same corpus (``index_sets_equal``, NSW
+  included), plus the §17.4 determinism regression: 1 worker vs N workers
+  produce byte-identical published snapshot trees.
+"""
+
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.lemma import FLList
+from repro.index import DocumentStore, build_indexes, index_sets_equal
+from repro.index.builder import build_segment
+from repro.index.fastbuild import build_segment_fast
+from repro.index.ingest import _write_spill_fast, bulk_build
+from repro.index.store import (
+    fl_signature,
+    load_snapshot,
+    open_segment_store,
+    write_segment_store,
+)
+from tests._hypothesis_compat import given, settings, st
+from tests.strategies import make_corpus, seeds
+
+
+def _spec_store(spec):
+    store = DocumentStore.from_texts(spec.texts)
+    fl = FLList.from_frequencies(
+        store.lemma_frequencies(), sw_count=spec.sw_count, fu_count=spec.fu_count
+    )
+    return store, fl
+
+
+def _tree_bytes(root: Path) -> dict[str, bytes]:
+    return {
+        str(p.relative_to(root)): p.read_bytes()
+        for p in sorted(Path(root).rglob("*"))
+        if p.is_file()
+    }
+
+
+def _assert_trees_identical(a: Path, b: Path, ctx: str) -> None:
+    ta, tb = _tree_bytes(a), _tree_bytes(b)
+    assert set(ta) == set(tb), (
+        f"{ctx}: file sets differ: only-a={sorted(set(ta) - set(tb))} "
+        f"only-b={sorted(set(tb) - set(ta))}"
+    )
+    diff = [k for k in sorted(ta) if ta[k] != tb[k]]
+    assert not diff, f"{ctx}: files differ byte-wise: {diff}"
+
+
+# ---------------------------------------------------------------------------
+# layer 1: vectorized builder == scalar builder
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seeds)
+def test_fastbuild_equals_scalar_builder(seed):
+    spec = make_corpus(seed, max_docs=8)
+    store, fl = _spec_store(spec)
+    ref = build_segment(store.documents, fl, max_distance=spec.max_distance)
+    fast = build_segment_fast(store.documents, fl, max_distance=spec.max_distance)
+    equal, why = index_sets_equal(fast, ref)
+    assert equal, f"seed {seed}: {why}"
+
+
+# ---------------------------------------------------------------------------
+# layer 2: raw spill writer == generic store writer, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seeds)
+def test_raw_spill_writer_byte_identical(seed):
+    spec = make_corpus(seed, max_docs=8)
+    store, fl = _spec_store(spec)
+    docs = store.documents
+    ids = [d.doc_id for d in docs]
+    crc = fl_signature(fl)
+    with tempfile.TemporaryDirectory() as td:
+        ref_dir, fast_dir = Path(td) / "ref", Path(td) / "fast"
+        write_segment_store(
+            build_segment_fast(docs, fl, max_distance=spec.max_distance),
+            ref_dir,
+            fl_crc=crc,
+            doc_ids=ids,
+        )
+        _write_spill_fast(
+            docs, fl, fast_dir, fl_crc=crc, doc_ids=ids,
+            max_distance=spec.max_distance, build_pair=True,
+            build_degenerate=True,
+        )
+        _assert_trees_identical(ref_dir, fast_dir, f"seed {seed}")
+        # the fast store must also round-trip through the verifying reader
+        open_segment_store(fast_dir, fl, expect_fl_crc=crc)
+
+
+def test_raw_spill_writer_empty_and_degenerate(tmp_path):
+    """Edge chunks: no candidates at all, a single one-word doc, and a doc
+    whose every position carries the same (duplicate) lemma."""
+    fl = FLList.from_frequencies({"the": 9, "who": 5, "walk": 2},
+                                 sw_count=1, fu_count=1)
+    crc = fl_signature(fl)
+    cases = {
+        "empty": [],
+        "single": ["walk"],
+        "dup": ["walk walking walked walk walks"],
+    }
+    for name, texts in cases.items():
+        docs = DocumentStore.from_texts(texts).documents
+        ids = [d.doc_id for d in docs]
+        ref_dir = tmp_path / f"{name}_ref"
+        fast_dir = tmp_path / f"{name}_fast"
+        write_segment_store(
+            build_segment_fast(docs, fl), ref_dir, fl_crc=crc, doc_ids=ids
+        )
+        _write_spill_fast(docs, fl, fast_dir, fl_crc=crc, doc_ids=ids,
+                          max_distance=5, build_pair=True,
+                          build_degenerate=True)
+        _assert_trees_identical(ref_dir, fast_dir, name)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: end-to-end bulk build == in-RAM build over random spill shapes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seeds)
+def test_bulk_build_equals_in_ram_build(seed):
+    spec = make_corpus(seed, max_docs=10)
+    rng = np.random.default_rng(seed ^ 0x5B1711)
+    docs_per_spill = int(rng.integers(1, len(spec.texts) + 2))
+    with tempfile.TemporaryDirectory() as td:
+        bulk_build(
+            spec.texts,
+            out_dir=td,
+            sw_count=spec.sw_count,
+            fu_count=spec.fu_count,
+            max_distance=spec.max_distance,
+            docs_per_spill=docs_per_spill,
+        )
+        restored = load_snapshot(td)
+        ref = build_indexes(
+            DocumentStore.from_texts(spec.texts),
+            sw_count=spec.sw_count,
+            fu_count=spec.fu_count,
+            max_distance=spec.max_distance,
+        )
+        got = restored.index.to_index_set()
+        equal, why = index_sets_equal(got, ref)
+        assert equal, f"seed {seed} dps={docs_per_spill}: {why}"
+        # NSW payloads specifically (ragged offsets survive the disk merge)
+        assert set(got.nsw) == set(ref.nsw)
+
+
+def test_bulk_build_single_doc_and_duplicate_lemma_corpus(tmp_path):
+    for name, texts in {
+        "single": ["to be or not to be"],
+        "dup": ["walk walking walked", "walks walk the walk"],
+    }.items():
+        out = tmp_path / name
+        bulk_build(texts, out_dir=out, sw_count=2, fu_count=2,
+                   docs_per_spill=1)
+        restored = load_snapshot(out)
+        ref = build_indexes(DocumentStore.from_texts(texts),
+                            sw_count=2, fu_count=2)
+        equal, why = index_sets_equal(restored.index.to_index_set(), ref)
+        assert equal, f"{name}: {why}"
+
+
+# ---------------------------------------------------------------------------
+# §17.4 determinism regression: worker count must not leak into the bytes
+# ---------------------------------------------------------------------------
+
+
+def test_bulk_build_worker_count_invariant(tmp_path):
+    """1-worker and N-worker builds publish byte-identical snapshot trees —
+    exact, not statistical: the §17.4 contract that lets CI compare bulk
+    stores across machines."""
+    store = DocumentStore.from_texts(make_corpus(1234, max_docs=12).texts)
+    texts = [d.text for d in store.documents]
+    out1, out2 = tmp_path / "w1", tmp_path / "w2"
+    bulk_build(texts, out_dir=out1, sw_count=10, fu_count=20,
+               docs_per_spill=3, workers=1)
+    bulk_build(texts, out_dir=out2, sw_count=10, fu_count=20,
+               docs_per_spill=3, workers=3)
+    _assert_trees_identical(out1 / "snap_0", out2 / "snap_0", "workers 1 vs 3")
