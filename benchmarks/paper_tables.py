@@ -1014,10 +1014,18 @@ def bench_robustness(quick=False, chaos_seeds=(101, 202, 303)):
       * ``chaos``         — the seeded chaos-differential sweep (the CI
         gate): for each schedule seed, every response over the run is
         either exact (== the clean baseline) or flagged partial with exact
-        coverage of the surviving shards.  ``mismatches`` must be 0.
+        coverage of the surviving shards; the sweep always includes one
+        UNRECOVERABLE schedule (kill + every restore candidate corrupted)
+        so the degraded path is provably exercised — ``flagged`` must be
+        >= 1 and ``mismatches`` must be 0;
+      * ``wal_replay``    — §18.2 crash-recovery cost: restore a WAL'd
+        service with a logged post-snapshot tail and report replay wall
+        time normalized to ms per 1k records, plus the zero-data-loss
+        check (replayed state ``index_sets_equal`` to the live service).
 
     The gates feed ``benchmarks/run.py`` (``chaos_results_MISMATCH``,
-    ``robustness_counters_DIRTY``) and ``BENCH_robustness.json``.
+    ``robustness_counters_DIRTY``, ``robustness_chaos_flag_GATE``,
+    ``robustness_mttr_GATE``) and ``BENCH_robustness.json``.
     """
     import shutil
     import tempfile
@@ -1151,6 +1159,60 @@ def bench_robustness(quick=False, chaos_seeds=(101, 202, 303)):
                     chaos_mismatches += 0 if ok else 1
             chaos_fired += len(svc.injector.log)
 
+        # one guaranteed-unrecoverable schedule: the kill sticks because
+        # EVERY restore candidate is corrupted, so every response must be
+        # flagged partial with exact surviving-shard coverage — this is
+        # what keeps ``flagged`` > 0 (a sweep whose seeds all recover
+        # would otherwise leave the degraded path unproven)
+        svc = ShardedSearchService(store, **kw)
+        svc.snapshot(tmpdir / "chaos_unrec")
+        svc.enable_resilience(
+            policy=ResiliencePolicy(**policy_kw),
+            injector=FaultInjector(schedule=[
+                FaultEvent("shard.search", "kill", shard=dead, at_call=0),
+                FaultEvent("store.load_snapshot", "bitflip", at_call=0,
+                           count=50, param=0.3),
+            ]),
+        )
+        for _ in range(rounds):
+            out = svc.search_batch(queries, top_k=top_k)
+            excluded = svc.supervisor.last_excluded
+            for got_resp, want in zip(out, baseline):
+                chaos_responses += 1
+                got = frags(got_resp)
+                if got_resp.stats.shards_degraded:
+                    chaos_flagged += 1
+                    ok = got_resp.stats.partial and got == {
+                        f for f in want if f[0] % n_shards not in excluded
+                    }
+                else:
+                    ok = not got_resp.stats.partial and got == want
+                chaos_mismatches += 0 if ok else 1
+        chaos_fired += len(svc.injector.log)
+
+        # ---- §18.2 WAL replay cost: restore with a logged tail -------------
+        from repro.index.incremental import index_sets_equal
+
+        svc = ShardedSearchService(store, **kw)
+        svc.enable_wal(tmpdir / "walrep")
+        svc.snapshot(tmpdir / "walrep")
+        n_ops = 25 if quick else 120
+        for i in range(n_ops):
+            svc.add_documents([f"wal bench doc {i} alpha beta gamma delta"])
+            svc.commit()
+        t0 = time.perf_counter()
+        restored = ShardedSearchService.restore(tmpdir / "walrep")
+        restore_total_sec = time.perf_counter() - t0
+        replay_records = sum(ix.last_wal_replay["records"]
+                             for ix in restored.indexers)
+        replay_sec = sum(ix.last_wal_replay["seconds"]
+                         for ix in restored.indexers)
+        wal_match = replay_records > 0 and all(
+            index_sets_equal(a.index.to_index_set(), b.index.to_index_set())[0]
+            and a.documents.keys() == b.documents.keys()
+            for a, b in zip(restored.indexers, svc.indexers)
+        )
+
         pct = lambda a, p: float(np.percentile(a, p) * 1e6)
         return {
             "fault_free": {
@@ -1178,8 +1240,17 @@ def bench_robustness(quick=False, chaos_seeds=(101, 202, 303)):
                 "faults_fired": chaos_fired,
                 "mismatches": chaos_mismatches,
             },
+            "wal_replay": {
+                "records": int(replay_records),
+                "replay_ms": 1000 * replay_sec,
+                "ms_per_1k_records": (
+                    1e6 * replay_sec / max(replay_records, 1)
+                ),
+                "restore_total_ms": 1000 * restore_total_sec,
+                "results_match": bool(wal_match),
+            },
             "results_match": bool(
-                ff_match and deg_match and rec_match
+                ff_match and deg_match and rec_match and wal_match
                 and chaos_mismatches == 0
             ),
         }

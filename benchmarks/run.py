@@ -297,8 +297,9 @@ def main() -> None:
 
     # ---- resilient serving under injected faults (DESIGN.md §14) -----------
     robustness = bench_robustness(quick=args.quick)
-    ff, deg, rec, chaos = (robustness[k] for k in
-                           ("fault_free", "degraded", "recovery", "chaos"))
+    ff, deg, rec, chaos, walrep = (robustness[k] for k in
+                                   ("fault_free", "degraded", "recovery",
+                                    "chaos", "wal_replay"))
     print(f"robustness_fault_free,{ff['p50_us']:.0f},"
           f"p99_us={ff['p99_us']:.0f};counters_clean={ff['counters_clean']}")
     print(f"robustness_degraded,{deg['p50_us']:.0f},"
@@ -310,21 +311,36 @@ def main() -> None:
           f"seeds={len(chaos['seeds'])};flagged={chaos['flagged']};"
           f"faults_fired={chaos['faults_fired']};"
           f"mismatches={chaos['mismatches']}")
+    print(f"robustness_wal_replay,{walrep['ms_per_1k_records']:.1f},"
+          f"records={walrep['records']};replay_ms={walrep['replay_ms']:.1f};"
+          f"results_match={walrep['results_match']}")
     # CI gates (benchmarks/README.md): under ANY seeded fault schedule every
-    # response must be exact or flagged-partial-with-exact-coverage; a
-    # degraded fan-out must flag 100% of its responses; and fault-free
-    # traffic must leave every §14 counter zero
+    # response must be exact or flagged-partial-with-exact-coverage; the
+    # chaos sweep must actually exercise the degraded path (flagged >= 1);
+    # a degraded fan-out must flag 100% of its responses; fault-free
+    # traffic must leave every §14 counter zero; and §18.2 recovery must
+    # stay within 10x of the fault-free batch (the MTTR bound)
     if chaos["mismatches"] or not robustness["results_match"]:
         print(f"chaos_results_MISMATCH,0,mismatches={chaos['mismatches']};"
               f"fault_free={ff['results_match']};"
               f"degraded={deg['results_match']};"
-              f"recovery={rec['results_match']}")
+              f"recovery={rec['results_match']};"
+              f"wal_replay={walrep['results_match']}")
+        sys.exit(1)
+    if chaos["flagged"] < 1:
+        print(f"robustness_chaos_flag_GATE,0,flagged={chaos['flagged']};"
+              "unrecoverable schedule produced no degraded responses")
         sys.exit(1)
     if deg["flagged_rate"] < 1.0:
         print(f"robustness_flag_GATE,0,flagged_rate={deg['flagged_rate']:.2f}")
         sys.exit(1)
     if not ff["counters_clean"]:
         print("robustness_counters_DIRTY,0,fault-free counters non-zero")
+        sys.exit(1)
+    if rec["batch_ms"] > 10 * rec["fault_free_batch_ms"]:
+        print(f"robustness_mttr_GATE,0,batch_ms={rec['batch_ms']:.1f};"
+              f"fault_free_batch_ms={rec['fault_free_batch_ms']:.1f};"
+              "recovery batch exceeded 10x fault-free")
         sys.exit(1)
     if args.json:
         out_path = Path(__file__).parent.parent / "BENCH_robustness.json"

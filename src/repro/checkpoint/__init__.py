@@ -1,5 +1,6 @@
 from .checkpoint import (
     CheckpointManager,
+    append_durable,
     fsync_json,
     latest_numbered,
     replace_dir,
@@ -13,6 +14,7 @@ __all__ = [
     "save_checkpoint",
     "restore_checkpoint",
     "fsync_json",
+    "append_durable",
     "replace_dir",
     "retain_latest",
     "latest_numbered",

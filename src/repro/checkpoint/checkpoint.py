@@ -70,6 +70,23 @@ def fsync_json(path: str | Path, obj: Any) -> None:
         os.fsync(f.fileno())
 
 
+def append_durable(path: str | Path, data: bytes) -> int:
+    """Append ``data`` to ``path`` and fsync before returning (DESIGN.md
+    §12.4 / §18.1) — the durability point of every write-ahead log frame:
+    once this returns, the bytes survive any crash, so an operation logged
+    through it may be acknowledged.  Returns the byte offset the frame was
+    written at (the file length before the append).  The file is opened and
+    closed per call so crashed writers never hold a recovered-over handle.
+    The appended bytes are identical to ``data`` (framing/CRC is the
+    caller's job — see ``index/wal.py``)."""
+    with open(path, "ab") as f:
+        offset = f.tell()
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    return offset
+
+
 def replace_dir(tmp: str | Path, final: str | Path) -> None:
     """Publish ``tmp`` as ``final`` without ever exposing a partial artifact
     (DESIGN.md §12.4).

@@ -15,6 +15,7 @@ from .store import (
     load_snapshot,
     save_snapshot,
 )
+from .wal import WalError, WalRecord, WriteAheadLog, read_frames, replay
 
 __all__ = [
     "Document",
@@ -35,4 +36,9 @@ __all__ = [
     "latest_snapshot",
     "load_snapshot",
     "save_snapshot",
+    "WalError",
+    "WalRecord",
+    "WriteAheadLog",
+    "read_frames",
+    "replay",
 ]

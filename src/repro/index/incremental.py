@@ -50,9 +50,11 @@ Design
 
 from __future__ import annotations
 
+import time
 from collections import Counter
 from collections.abc import Mapping
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Sequence
 
 import numpy as np
@@ -485,6 +487,12 @@ class IncrementalIndexer:
         # bump, so generation-keyed device caches (the posting arena) can
         # evict stale buffers eagerly instead of waiting for LRU pressure
         self._listeners: list = []
+        # write-ahead log (DESIGN.md §18): when attached via enable_wal /
+        # restore, every mutating op appends a durable record BEFORE the
+        # in-memory state changes; None = §12 snapshot-only durability
+        self.wal = None
+        # stats of the last §18.2 replay this indexer was restored through
+        self.last_wal_replay: dict = {"records": 0, "seconds": 0.0}
 
     def subscribe(self, callback):
         """Register ``callback(indexer)`` to run after every query-visible
@@ -540,17 +548,47 @@ class IncrementalIndexer:
             return (self._restore_epoch, self._mutations)
         return self._mutations
 
-    # -- durability (DESIGN.md §12; implementation in index/store.py) -------
+    # -- durability (DESIGN.md §12/§18; implementation in index/store.py
+    # and index/wal.py) ----------------------------------------------------
+
+    def enable_wal(self, lineage_dir, injector=None, shard=None):
+        """Attach a §18 write-ahead log at ``<lineage_dir>/wal`` — the same
+        lineage directory ``snapshot``/``restore`` use, so checkpoints,
+        retention and replay share one root.  From this point every
+        ``add``/``delete``/``commit``/``compact`` appends a durable record
+        before mutating, and ``restore`` of this lineage replays the tail
+        (the post-snapshot state is exact, not just the snapshot).
+        ``injector``/``shard`` feed the §14 ``wal.*`` fault points.
+        Returns the attached :class:`~repro.index.wal.WriteAheadLog`."""
+        from .wal import WriteAheadLog
+
+        self.wal = WriteAheadLog(
+            Path(lineage_dir) / "wal", injector=injector, shard=shard
+        )
+        return self.wal
 
     def snapshot(self, directory, keep: int = 2):
         """Freeze this indexer into ``<directory>/snap_<N>`` — the durable
         §12.2 on-disk form: delta+bitpacked segment stores, pre-lemmatized
         documents, tombstones, FL state and the §12.5 generation token.
         Atomic (tmp -> fsync -> rename) with ``keep``-newest retention;
-        returns the published snapshot path."""
-        from .store import save_snapshot
+        returns the published snapshot path.
 
-        return save_snapshot(self, directory, keep=keep)
+        With a §18 WAL attached, the snapshot is also a WAL checkpoint:
+        a ``checkpoint`` record anchors it in the log *before* it
+        publishes (a crash in between leaves a dangling anchor that
+        replays as a no-op), the active segment is sealed, and replayed
+        prefixes beyond the retention window are truncated."""
+        from .store import latest_snapshot, save_snapshot
+
+        if self.wal is not None:
+            prev = latest_snapshot(Path(directory))
+            upcoming = 0 if prev is None else prev + 1
+            self.wal.checkpoint(upcoming, self._mutations)
+        path = save_snapshot(self, directory, keep=keep)
+        if self.wal is not None:
+            self.wal.prune(keep=keep)
+        return path
 
     @classmethod
     def restore(
@@ -561,17 +599,25 @@ class IncrementalIndexer:
         verify: bool = True,
         lemmatizer: Lemmatizer | None = None,
         injector=None,
+        replay_wal: bool = True,
     ) -> "IncrementalIndexer":
         """Warm-start an indexer from a §12.2 snapshot: segments serve
-        lazily from ``mmap`` pages, nothing is replayed or re-lemmatized,
-        and the restored index is exact (``index_sets_equal`` vs the
-        snapshotted live view — the §12 contract the differential harness
-        pins).  Raises ``StoreError`` on corruption.  ``injector`` is the
-        §14 fault-injection hook passed through to ``load_snapshot`` (the
-        chaos harness corrupts snapshot bytes for real there)."""
-        from .store import load_snapshot
+        lazily from ``mmap`` pages and nothing is re-lemmatized.  When the
+        lineage has a §18 WAL (``<directory>/wal``), the tail logged after
+        the restored snapshot's checkpoint is replayed on top, so the
+        restored index is exact (``index_sets_equal``) vs the uncrashed
+        live indexer *including post-snapshot commits* — the §18.2
+        zero-data-loss contract; without a WAL it is exact vs the
+        snapshotted view (the §12 contract), as before.  Raises
+        ``StoreError`` on corruption.  ``injector`` is the §14
+        fault-injection hook passed through to ``load_snapshot`` and the
+        re-attached WAL (the chaos harness corrupts snapshot and WAL bytes
+        for real there); ``replay_wal=False`` restores the bare snapshot.
+        Replay stats land in ``last_wal_replay`` (record count, seconds)."""
+        from .store import latest_snapshot, load_snapshot
 
-        return load_snapshot(
+        directory = Path(directory)
+        ix = load_snapshot(
             directory,
             snapshot_id=snapshot_id,
             use_mmap=use_mmap,
@@ -579,6 +625,26 @@ class IncrementalIndexer:
             lemmatizer=lemmatizer,
             injector=injector,
         )
+        wal_dir = directory / "wal"
+        if wal_dir.exists():
+            from .wal import WriteAheadLog
+            from .wal import replay as wal_replay
+
+            ix.wal = WriteAheadLog(wal_dir, injector=injector)
+            if replay_wal:
+                sid = (
+                    snapshot_id
+                    if snapshot_id is not None
+                    else latest_snapshot(directory)
+                )
+                tail = ix.wal.tail_after_snapshot(sid)
+                t0 = time.perf_counter()
+                applied = wal_replay(ix, tail)
+                ix.last_wal_replay = {
+                    "records": applied,
+                    "seconds": time.perf_counter() - t0,
+                }
+        return ix
 
     @classmethod
     def bulk_build(
@@ -600,13 +666,20 @@ class IncrementalIndexer:
         keep_spills: bool = False,
         injector=None,
         lemmatizer: Lemmatizer | None = None,
+        wal: bool = False,
     ) -> tuple["IncrementalIndexer", "object"]:
         """External-memory cold build (§17): SPIMI spill/merge straight to a
         published §12.2 snapshot, then warm-start an indexer from it.  The
         result is byte-identical to ``snapshot()`` after a one-commit build of
         the same corpus (the §17.4 determinism contract), but an order of
         magnitude faster because postings never round-trip through Python
-        dicts.  Returns ``(indexer, BulkBuildStats)``."""
+        dicts.  Returns ``(indexer, BulkBuildStats)``.
+
+        With ``wal=True`` the returned indexer gets a §18 write-ahead log
+        attached under ``out_dir/wal`` anchored by a typed ``bulk_build``
+        checkpoint record for the published snapshot, so incremental
+        mutations after the cold build are crash-recoverable with zero
+        committed-write loss (§18.2)."""
         from .ingest import bulk_build as _bulk_build
 
         stats = _bulk_build(
@@ -626,7 +699,15 @@ class IncrementalIndexer:
             keep_spills=keep_spills,
             injector=injector,
         )
-        return cls.restore(out_dir, lemmatizer=lemmatizer), stats
+        ix = cls.restore(out_dir, lemmatizer=lemmatizer)
+        if wal and ix.wal is None:
+            from .store import latest_snapshot
+
+            log = ix.enable_wal(out_dir, injector=injector)
+            log.checkpoint(
+                latest_snapshot(Path(out_dir)), ix._mutations, rtype="bulk_build"
+            )
+        return ix, stats
 
     # -- ingest / delete ----------------------------------------------------
 
@@ -642,26 +723,42 @@ class IncrementalIndexer:
         """
         if doc_ids is not None and len(doc_ids) != len(texts):
             raise ValueError("doc_ids must parallel texts")
-        out: list[int] = []
-        for i, text in enumerate(texts):
-            doc_id = self._next_id if doc_ids is None else int(doc_ids[i])
-            self._ingest(
-                Document(
-                    doc_id=doc_id,
-                    text=text,
-                    lemma_stream=self.lemmatizer.lemmatize_text(text),
-                )
+        base = self._next_id
+        docs = [
+            Document(
+                doc_id=base + i if doc_ids is None else int(doc_ids[i]),
+                text=text,
+                lemma_stream=self.lemmatizer.lemmatize_text(text),
             )
-            out.append(doc_id)
-        return out
+            for i, text in enumerate(texts)
+        ]
+        return self.add_prelemmatized(docs)
 
     def add_prelemmatized(self, documents: Sequence[Document]) -> list[int]:
         """Ingest documents that already carry a ``lemma_stream`` (e.g. from
         a ``DocumentStore``) without re-lemmatizing; doc ids are taken from
-        the documents and must be fresh."""
-        for doc in documents:
+        the documents and must be fresh.  The batch is validated up front
+        and (with a §18 WAL attached) logged as ONE durable ``add`` record
+        carrying the pre-lemmatized payloads BEFORE any buffer mutates —
+        a batch either appends entirely or raises without side effects."""
+        docs = list(documents)
+        seen: set[int] = set()
+        for doc in docs:
+            if (
+                doc.doc_id in self.documents
+                or doc.doc_id in self._buffer
+                or doc.doc_id in self.tombstones
+                or doc.doc_id in seen
+            ):
+                raise ValueError(f"doc id {doc.doc_id} already used")
+            seen.add(doc.doc_id)
+        if self.wal is not None and docs:
+            from .wal import docs_to_payload
+
+            self.wal.append("add", {"docs": docs_to_payload(docs)})
+        for doc in docs:
             self._ingest(doc)
-        return [doc.doc_id for doc in documents]
+        return [doc.doc_id for doc in docs]
 
     def _ingest(self, doc: Document) -> None:
         doc_id = doc.doc_id
@@ -680,7 +777,13 @@ class IncrementalIndexer:
 
     def delete_document(self, doc_id: int) -> None:
         """Tombstone a committed doc (effective immediately at query time) or
-        drop it from the ingest buffer.  Raises ``KeyError`` if unknown."""
+        drop it from the ingest buffer.  Raises ``KeyError`` if unknown.
+        With a §18 WAL attached the delete is durably logged before it
+        applies (unknown ids raise without logging)."""
+        if doc_id not in self._buffer and doc_id not in self.documents:
+            raise KeyError(doc_id)
+        if self.wal is not None:
+            self.wal.append("delete", {"doc_id": int(doc_id)})
         if doc_id in self._buffer:
             doc = self._buffer.pop(doc_id)
         elif doc_id in self.documents:
@@ -708,7 +811,29 @@ class IncrementalIndexer:
         reduce), the FL-list moves to the new generation and drifted
         documents are re-keyed (see module docstring).  Returns a generation
         report: ``{"new_docs", "rekeyed_docs", "drifted_lemmas", "segments"}``.
+
+        With a §18 WAL attached, the commit's *resolved* FL (explicit,
+        refreshed from surviving frequencies, or kept) is computed first
+        and durably logged before any state mutates — so replaying the
+        record on another process reproduces this commit exactly, even
+        when the FL came from a corpus-level reduce this shard could not
+        recompute alone (§18.2).
         """
+        if self.wal is not None:
+            from .wal import fl_to_payload
+
+            if fl is not None:
+                resolved = fl
+            elif refresh_fl or self.fl is None:
+                resolved = FLList.from_frequencies(
+                    self.surviving_frequencies(),
+                    sw_count=self.sw_count,
+                    fu_count=self.fu_count,
+                )
+            else:
+                resolved = self.fl
+            self.wal.append("commit", {"fl": fl_to_payload(resolved)})
+            fl = resolved
         new_docs = list(self._buffer.values())
         self._buffer = {}
         if fl is not None:
@@ -834,9 +959,13 @@ class IncrementalIndexer:
         """Rewrite segments: k-way merge adjacent segments into as few as the
         ``memory_budget_bytes`` working-set bound allows, physically dropping
         tombstoned and superseded rows; clears the collected tombstones.
+        With a §18 WAL attached the compaction (a deterministic function
+        of the budget and current state) is durably logged before it runs.
         """
         if not self.segments:
             return {"segments": 0, "collected": 0}
+        if self.wal is not None:
+            self.wal.append("compact", {"memory_budget_bytes": memory_budget_bytes})
         groups: list[list[Segment]] = []
         cur: list[Segment] = []
         cur_bytes = 0

@@ -17,18 +17,23 @@ Useful flags:
 * ``--algorithm``     SE1/SE2.1–SE2.4 host loops or the fused device batch
                       (``--no-frontend`` path only);
 * ``--kill-shard``    degraded fan-out demo (``--no-frontend`` path only);
-* ``--snapshot-dir``  durable-index warm start (DESIGN.md §12): if the
-                      directory holds a service snapshot, restore it and
-                      serve straight from mmap'd disk pages — no corpus
-                      build, no re-lemmatization; otherwise build the
-                      corpus once and snapshot into the directory so the
+* ``--snapshot-dir``  durable-index warm start (DESIGN.md §12 + §18): if the
+                      directory holds a service snapshot, restore it, replay
+                      each shard's write-ahead-log tail (post-snapshot ops
+                      come back too — §18.2 zero data loss) and serve
+                      straight from mmap'd disk pages — no corpus build, no
+                      re-lemmatization; otherwise build the corpus once, arm
+                      the §18 WAL and snapshot into the directory so the
                       NEXT run warm-starts (the crash-recovery loop);
 * ``--daemon``        serve over the network (DESIGN.md §16): start the
                       continuous-batching :class:`ServiceDaemon` behind the
                       JSON-lines TCP transport and run until Ctrl-C;
                       ``--port`` picks the listen port (0 = ephemeral,
-                      printed on startup), ``--replicas`` the number of
-                      frontend replicas sharing the index lineage;
+                      printed on startup); with ``--replicas N`` (N > 1) the
+                      replicas run behind the §18.3 lease-based
+                      :class:`ReplicatedServiceDaemon` — kill the primary
+                      from a client (``--kill-primary``) and the successor
+                      re-admits its in-flight requests exactly once;
 * ``--connect``       be the client instead: send ``--queries`` to a
                       running ``--daemon`` at HOST:PORT and print the wire
                       responses (no corpus build on this side);
@@ -128,11 +133,19 @@ def main() -> None:
                     help="TCP listen port for --daemon (0 = ephemeral, "
                          "printed on startup)")
     ap.add_argument("--replicas", type=int, default=1,
-                    help="frontend replicas behind the --daemon queue "
-                         "(round-robin routed, one shared index lineage)")
+                    help="daemon replicas behind --daemon (one shared "
+                         "snapshot+WAL lineage).  With N > 1 the replicas "
+                         "run behind the §18.3 primary lease: kill the "
+                         "primary (--connect ... --kill-primary) and the "
+                         "successor re-admits its in-flight requests "
+                         "exactly once with byte-identical responses")
     ap.add_argument("--connect", default=None, metavar="HOST:PORT",
                     help="client mode: send --queries to a running --daemon "
                          "and print the wire responses")
+    ap.add_argument("--kill-primary", action="store_true",
+                    help="client mode: kill the serving daemon's primary "
+                         "replica (§18.3 failover walkthrough) before "
+                         "sending --queries")
     ap.add_argument("--arena-budget-mb", type=float, default=64.0,
                     help="device-resident posting arena byte budget "
                          "(DESIGN.md §13; 0 disables — frontend mode only): "
@@ -149,6 +162,13 @@ def main() -> None:
 
         host, _, port = args.connect.rpartition(":")
         address = (host or "127.0.0.1", int(port))
+        if args.kill_primary:
+            out = request_over_tcp(address, {"op": "kill_primary"})
+            if "error" in out:
+                print(f"kill_primary: {out['error']}")
+            else:
+                print(f"kill_primary: replica {out['killed']} killed; "
+                      f"successor takes over after the lease expires")
         for q in args.queries * args.repeat:
             payload = {"query": q, "top_k": args.top_k}
             if args.deadline_ms is not None:
@@ -165,9 +185,15 @@ def main() -> None:
                 print(f"  doc {d['doc_id']:5d} score={d['score']:.4f} "
                       f"fragments: {frags}")
         m = request_over_tcp(address, {"op": "metrics"})["metrics"]
-        print(f"\ndaemon: {m['completed']} completed, {m['shed_queue']} shed, "
-              f"{m['batches']} batches, "
-              f"mean occupancy {m['mean_batch_occupancy']:.2f}")
+        if "failovers" in m:  # §18.3 replicated daemon
+            print(f"\ndaemon: primary={m['primary']} alive={m['alive']}, "
+                  f"{m['completed']}/{m['requests']} completed, "
+                  f"{m['failovers']} failover(s), "
+                  f"{m['readmitted']} re-admitted exactly-once")
+        else:
+            print(f"\ndaemon: {m['completed']} completed, {m['shed_queue']} shed, "
+                  f"{m['batches']} batches, "
+                  f"mean occupancy {m['mean_batch_occupancy']:.2f}")
         return
 
     from ..index.corpus import synthesize_corpus
@@ -185,6 +211,16 @@ def main() -> None:
         print(f"warm start: restored {svc.n_shards} shards / {n_docs} docs "
               f"from {args.snapshot_dir} in "
               f"{(time.perf_counter() - t0) * 1000:.0f} ms (no rebuild)")
+        replayed = sum(ix.last_wal_replay["records"] for ix in svc.indexers)
+        if any(ix.wal is None for ix in svc.indexers):
+            # pre-§18 snapshot tree (no wal/ dirs): start logging now so the
+            # NEXT crash is covered by the zero-data-loss contract
+            svc.enable_wal(args.snapshot_dir)
+        if replayed:
+            replay_ms = 1e3 * sum(
+                ix.last_wal_replay["seconds"] for ix in svc.indexers)
+            print(f"wal: replayed {replayed} post-snapshot record(s) in "
+                  f"{replay_ms:.0f} ms (§18.2 zero-data-loss)")
         # build flags describe a NEW corpus; a warm start serves the stored
         # one — surface any conflicting explicit flags instead of silently
         # dropping them (delete the snapshot dir to rebuild)
@@ -239,9 +275,12 @@ def main() -> None:
         )
         build_ms = (time.perf_counter() - t0) * 1000
         if args.snapshot_dir:
+            # arm the §18 WAL before the first snapshot so snap_0 carries a
+            # checkpoint anchor and every later op is durably logged
+            svc.enable_wal(args.snapshot_dir)
             svc.snapshot(args.snapshot_dir)
             print(f"cold start: built in {build_ms:.0f} ms, snapshotted to "
-                  f"{args.snapshot_dir} (rerun to warm-start)")
+                  f"{args.snapshot_dir} (rerun to warm-start; §18 WAL armed)")
 
     if args.chaos_seed is not None:
         from ..search.resilience import FaultInjector, ResiliencePolicy
@@ -288,9 +327,13 @@ def main() -> None:
           f"{warm['seconds'] * 1000:.0f} ms (cold p99 excludes jit compile)")
 
     if args.daemon:
-        from ..search.service import ServiceDaemon, serve_tcp
+        from ..search.service import (
+            ReplicatedServiceDaemon,
+            ServiceDaemon,
+            serve_tcp,
+        )
 
-        replicas = [frontend] + [
+        fronts = [frontend] + [
             ServingFrontend(
                 svc,
                 default_deadline_sec=deadline,
@@ -298,12 +341,22 @@ def main() -> None:
             )
             for _ in range(max(1, args.replicas) - 1)
         ]
-        daemon = ServiceDaemon(replicas)
+        if args.replicas > 1:
+            # §18.3: N independent daemon replicas behind a lease-based
+            # primary.  --kill-primary (client mode) crashes the primary;
+            # the successor re-admits its in-flight tickets exactly once
+            # under the original request ids.
+            daemon = ReplicatedServiceDaemon([ServiceDaemon([f]) for f in fronts])
+        else:
+            daemon = ServiceDaemon(fronts)
         server = serve_tcp(daemon, port=args.port)
         host, port = server.address
-        print(f"daemon: {len(replicas)} replica(s) listening on {host}:{port}")
+        print(f"daemon: {len(fronts)} replica(s) listening on {host}:{port}"
+              + (" (§18.3 lease-based failover armed)"
+                 if args.replicas > 1 else ""))
         print(f"  try:  python -m repro.launch.serve --connect {host}:{port} "
-              f"--queries 'who are you who'")
+              f"--queries 'who are you who'"
+              + (" --kill-primary" if args.replicas > 1 else ""))
         try:
             while True:
                 time.sleep(3600)
@@ -314,9 +367,15 @@ def main() -> None:
             server.server_close()
             daemon.stop()
             m = daemon.metrics()
-            print(f"\ndaemon: {m['completed']} completed, "
-                  f"{m['shed_queue']} shed, {m['batches']} batches, "
-                  f"mean occupancy {m['mean_batch_occupancy']:.2f}")
+            if "failovers" in m:  # §18.3 replicated daemon
+                print(f"\ndaemon: primary={m['primary']} alive={m['alive']}, "
+                      f"{m['completed']}/{m['requests']} completed, "
+                      f"{m['failovers']} failover(s), "
+                      f"{m['readmitted']} re-admitted exactly-once")
+            else:
+                print(f"\ndaemon: {m['completed']} completed, "
+                      f"{m['shed_queue']} shed, {m['batches']} batches, "
+                      f"mean occupancy {m['mean_batch_occupancy']:.2f}")
         return
     if args.explain:
         for q in args.queries:

@@ -2,7 +2,14 @@ from .engine import SearchEngine, RankedDoc, QueryResponse
 from .frontend import PostingCache, SearchRequest, ServingFrontend
 from .planner import KeyBinding, QueryPlan, QueryPlanner, SubqueryPlan, execute_plans
 from .relevance import fragment_score, rank_documents
-from .service import ServiceDaemon, Ticket, request_over_tcp, serve_tcp
+from .service import (
+    ReplicatedServiceDaemon,
+    RequestHandle,
+    ServiceDaemon,
+    Ticket,
+    request_over_tcp,
+    serve_tcp,
+)
 
 __all__ = [
     "SearchEngine",
@@ -19,6 +26,8 @@ __all__ = [
     "SearchRequest",
     "PostingCache",
     "ServiceDaemon",
+    "ReplicatedServiceDaemon",
+    "RequestHandle",
     "Ticket",
     "serve_tcp",
     "request_over_tcp",

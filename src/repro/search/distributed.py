@@ -146,6 +146,26 @@ class ShardedSearchService:
         if resilience is not None or injector is not None:
             self.enable_resilience(policy=resilience, injector=injector)
 
+    def enable_wal(self, directory, injector=None):
+        """Attach a §18 write-ahead log to every shard under
+        ``<directory>/shard_<i>/wal`` — the same per-shard lineage dirs
+        ``snapshot``/``restore`` use (DESIGN.md §18.1).  From this point
+        every routed ``add``/``delete`` and every shard commit of the
+        corpus-level FL reduce is durably logged before it applies, and
+        ``restore`` / §14 shard recovery replays the tails, so recovered
+        shards come back ``index_sets_equal`` to uncrashed replicas
+        *including post-snapshot commits* (§18.2 zero-data-loss contract).
+        ``injector`` (defaults to the service's §14 injector) arms the
+        ``wal.append``/``wal.torn_tail`` fault points per shard."""
+        from pathlib import Path
+
+        self._require_incremental()
+        directory = Path(directory)
+        inj = injector if injector is not None else self.injector
+        for i, ix in enumerate(self.indexers):
+            ix.enable_wal(directory / f"shard_{i:02d}", injector=inj, shard=i)
+        return [ix.wal for ix in self.indexers]
+
     def enable_resilience(self, policy=None, injector=None, clock=None):
         """Switch the fan-out onto the §14 failure path (DESIGN.md §14).
 
@@ -313,8 +333,13 @@ class ShardedSearchService:
             "doc_len": self.doc_len,
         })
         manifest_tmp.replace(directory / "service.json")
-        for i in range(self.n_shards):
+        for i, ix in enumerate(self.indexers):
             retain_latest(directory / f"shard_{i:02d}", SNAPSHOT_PREFIX, keep)
+            if ix.wal is not None:
+                # §18.2: snapshots are WAL checkpoints — sealed segments
+                # whose replay the retained snapshots no longer need are
+                # truncated with the SAME retention depth
+                ix.wal.prune(keep)
         # remember where durable state lives: the §14 supervisor recovers
         # crashed shards from here unless its policy pins another root
         self.last_snapshot_dir = directory
@@ -330,10 +355,13 @@ class ShardedSearchService:
     ) -> "ShardedSearchService":
         """Warm-start a sharded service from a ``snapshot`` directory
         (DESIGN.md §12.2): every shard restores its latest snapshot lazily
-        (``mmap``-backed segments, nothing replayed), the shared FL-list and
-        doc-id router resume from the stored state, and the restored service
-        returns fragment sets identical to the snapshotted live one (the
-        §12 exactness contract).  Raises ``StoreError`` on corruption."""
+        (``mmap``-backed segments), the shared FL-list and doc-id router
+        resume from the stored state, and the restored service returns
+        fragment sets identical to the snapshotted live one (the §12
+        exactness contract).  Shards with a §18 WAL additionally replay
+        the operation tail logged after their snapshots, so the restored
+        service is exact vs the *uncrashed live* one — post-snapshot
+        commits included (§18.2).  Raises ``StoreError`` on corruption."""
         from pathlib import Path
 
         from ..index.incremental import IncrementalIndexer
@@ -367,6 +395,11 @@ class ShardedSearchService:
             )
             for i in range(svc.n_shards)
         ]
+        for i, ix in enumerate(svc.indexers):
+            if ix.wal is not None:
+                # re-tag re-attached WALs with their shard ids so the §14
+                # wal.* fault points key per-shard arrival counters
+                ix.wal.shard = i
         svc.fl = svc.indexers[0].fl
         svc._next_doc_id = max(ix._next_id for ix in svc.indexers)
         return svc

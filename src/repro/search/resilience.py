@@ -126,7 +126,22 @@ class FaultInjector:
     ``ingest.spill``      bulk ingest, per chunk   ``crash``, ``kill``
     ``ingest.merge``      bulk ingest merge open   ``bitflip`` (on the
                                                    chunk's spill store)
+    ``wal.append``        WAL frame append (§18)   ``crash``, ``kill``
+    ``wal.torn_tail``     WAL frame append (§18)   ``crash``, ``kill``
+    ``daemon.crash``      replicated daemon pump   ``kill``
     ====================  =======================  =========================
+
+    The ``wal.*`` points (§18.1) fire with ``shard=`` the WAL's shard id:
+    at ``wal.append`` the fault aborts BEFORE any byte is written (the
+    operation is lost but was never acknowledged — no durability hole);
+    at ``wal.torn_tail`` the log flushes a *partial* frame first, so the
+    reader's truncate-at-last-valid-frame path is exercised against a
+    real torn tail.  A ``kill`` at either point also marks the shard down
+    (the process died mid-write), handing the shard to §14 recovery —
+    which now replays the WAL tail.  ``daemon.crash`` (§18.3) fires with
+    ``shard=`` the daemon replica id; ``kill`` raises without touching
+    the shard down-set (replica liveness is the replicated daemon's own
+    state, keyed separately from index shards).
 
     The ``ingest.*`` points (§17) fire with ``shard=`` set to the CHUNK id
     and, for ``ingest.merge``, ``path=`` to the chunk directory so a
@@ -154,13 +169,16 @@ class FaultInjector:
         self.log: list[dict] = []  # fired events, for reports and tests
 
     @classmethod
-    def from_seed(cls, seed: int, n_shards: int) -> "FaultInjector":
+    def from_seed(cls, seed: int, n_shards: int, wal: bool = False) -> "FaultInjector":
         """Expand ``seed`` into a deterministic fault schedule (§14): one
         or two transient crashes, one permanent kill (exercises snapshot
         recovery), a straggler delay, and — seed-dependently — a snapshot
         bit-flip on the first recovery restore and a round of arena
-        pressure.  Equal seeds produce equal schedules, so CI replays are
-        exact."""
+        pressure.  With ``wal=True`` the schedule additionally draws §18
+        durability faults — crashes mid-WAL-append, a torn-tail kill
+        mid-commit, and a primary daemon kill — appended AFTER the base
+        draws, so base schedules are identical with or without the flag.
+        Equal seeds produce equal schedules, so CI replays are exact."""
         rng = np.random.default_rng(seed)
         events: list[FaultEvent] = []
         for _ in range(int(rng.integers(1, 3))):
@@ -186,6 +204,20 @@ class FaultInjector:
             events.append(FaultEvent(
                 "arena.acquire", "overflow",
                 at_call=int(rng.integers(0, 4)), count=int(rng.integers(1, 3)),
+            ))
+        if wal:
+            events.append(FaultEvent(
+                "wal.append", "crash", shard=int(rng.integers(n_shards)),
+                at_call=int(rng.integers(0, 4)),
+            ))
+            if rng.random() < 0.7:
+                events.append(FaultEvent(
+                    "wal.torn_tail", "kill", shard=int(rng.integers(n_shards)),
+                    at_call=int(rng.integers(0, 4)),
+                ))
+            events.append(FaultEvent(
+                "daemon.crash", "kill", shard=0,
+                at_call=int(rng.integers(1, 5)),
             ))
         return cls(schedule=events, seed=seed)
 
@@ -248,7 +280,10 @@ class FaultInjector:
                 raise ShardCrash(shard if shard is not None else -1,
                                  transient=True, point=point)
             if ev.kind == "kill":
-                self.down.add(int(shard))
+                if point != "daemon.crash":
+                    # daemon replicas are not index shards: their liveness
+                    # lives in the replicated daemon, not the down-set
+                    self.down.add(int(shard))
                 self._log(ev, shard=shard, arrival=n)
                 raise ShardCrash(shard, transient=False, point=point)
             if ev.kind == "delay" and attempt == 0:
@@ -470,6 +505,8 @@ class ShardSupervisor:
             clock=self.clock,
         )
         self.recoveries = 0
+        # §18.2 accounting: total WAL records replayed across recoveries
+        self.wal_records_replayed = 0
         self.last_excluded: frozenset[int] = frozenset()
         self._pool = None
 
@@ -601,7 +638,8 @@ class ShardSupervisor:
     # ---- recovery ----------------------------------------------------------
 
     def recover_shard(self, shard: int, stats: QueryStats | None = None) -> bool:
-        """Re-restore ``shard`` from the newest restorable §12.2 snapshot.
+        """Re-restore ``shard`` from the newest restorable §12.2 snapshot,
+        then replay its §18 WAL tail (post-snapshot commits included).
 
         Walks snapshot ids downward past corrupt candidates (a bit-flipped
         blob fails the store's CRC verify and raises ``StoreError`` — the
@@ -609,12 +647,19 @@ class ShardSupervisor:
         indexer is REPLACED: the restored one claims a fresh §12.5 epoch,
         so the service token changes and result/posting/arena caches keyed
         by pre-crash tokens can never serve again (exactness across the
-        crash).  If the restored FL state disagrees with the service's live
-        FL-list (the crash lost post-snapshot commits), the shard re-keys
-        under the live FL so cross-shard lemma typing stays agreed — the
-        §3 invariant sharded exactness depends on.  Returns False (shard
-        stays degraded, responses stay flagged) when recovery is disabled,
-        no snapshot root is known, or every candidate is corrupt."""
+        crash).  When the shard lineage has a write-ahead log, ``restore``
+        replays every operation durably logged after the chosen snapshot
+        (§18.2), so the recovered shard is ``index_sets_equal`` to an
+        uncrashed replica — zero committed-write loss, and the recovered
+        FL already agrees with the service's live FL-list.  The pre-§18
+        lost-commit guard survives only as a WAL-less fallback: if the
+        restored FL state still disagrees with the live FL (no WAL, or a
+        truncated tail), the shard re-keys under the live FL so
+        cross-shard lemma typing stays agreed — the §3 invariant sharded
+        exactness depends on (approximate recovery: flagged, never
+        silently wrong).  Returns False (shard stays degraded, responses
+        stay flagged) when recovery is disabled, no snapshot root is
+        known, or every candidate is corrupt."""
         pol = self.policy
         svc = self.service
         if not pol.recover or getattr(svc, "indexers", None) is None:
@@ -640,6 +685,11 @@ class ShardSupervisor:
             except StoreError:
                 sid -= 1  # corrupt / missing candidate: walk to an older one
                 continue
+            if ix.wal is not None:
+                ix.wal.shard = shard  # re-key the §14 wal.* arrival counters
+            self.wal_records_replayed += ix.last_wal_replay["records"]
+            # WAL-less fallback (pre-§18 mechanism): with a replayed tail
+            # the FL signatures already agree and this is a no-op
             if svc.fl is not None and fl_signature(ix.fl) != fl_signature(svc.fl):
                 ix.commit(fl=svc.fl)
             svc.indexers[shard] = ix
@@ -657,6 +707,7 @@ class ShardSupervisor:
         service, the frontend ``metrics()`` and ``launch/serve.py``."""
         return {
             "recoveries": self.recoveries,
+            "wal_records_replayed": self.wal_records_replayed,
             "last_excluded": sorted(self.last_excluded),
             "stragglers": self.health.stragglers(),
             **self.health.metrics(),

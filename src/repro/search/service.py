@@ -28,6 +28,16 @@ schedule deterministically with no real sleeps or sockets
 exact tick boundaries.  A thin JSON-lines TCP transport
 (:func:`serve_tcp`) exposes the same daemon over real sockets for
 ``launch/serve.py --daemon`` and ``benchmarks/load.py``.
+
+Replicated failover (DESIGN.md §18.3): :class:`ReplicatedServiceDaemon`
+runs N such daemons over one snapshot+WAL lineage behind a deterministic,
+injectable-clock primary lease.  Requests carry client-visible idempotent
+ids; when the primary is killed mid-flight, the successor re-admits its
+unanswered tickets exactly once each, and — because replicas serve one
+lineage deterministically — the re-admitted responses are byte-identical
+to what the dead primary would have returned (pinned by
+``tests/test_chaos.py``): every acknowledged write/read is answered
+exactly once, exact or flagged, never silently lost.
 """
 
 from __future__ import annotations
@@ -47,6 +57,8 @@ from .frontend import SearchRequest, ServingFrontend
 __all__ = [
     "Ticket",
     "ServiceDaemon",
+    "RequestHandle",
+    "ReplicatedServiceDaemon",
     "response_to_wire",
     "serve_tcp",
     "TcpDaemonServer",
@@ -470,6 +482,361 @@ class ServiceDaemon:
             }
 
 
+# ---- replicated daemon failover (DESIGN.md §18.3) --------------------------
+
+
+class RequestHandle:
+    """A client's durable handle on one idempotent request (§18.3).
+
+    Keyed by a client-visible ``request_id``: re-submitting the same id —
+    whether a client retry or the successor re-admitting a killed
+    primary's in-flight work — always resolves to this ONE handle, and
+    :meth:`result` always returns the ONE recorded response (byte-identical
+    on every read; the §18.3 exactly-once contract).  ``ticket`` tracks
+    the currently-assigned underlying :class:`Ticket` (it changes exactly
+    once per failover re-admission); completions from a superseded ticket
+    of a dead primary are accepted only while it is still current, so a
+    request is never answered twice.
+    """
+
+    __slots__ = ("request_id", "request", "ticket", "readmissions", "_event", "_response")
+
+    def __init__(self, request_id: str, request: SearchRequest):
+        self.request_id = request_id
+        self.request = request
+        self.ticket: Ticket | None = None
+        self.readmissions = 0
+        self._event = threading.Event()
+        self._response: QueryResponse | None = None
+
+    def done(self) -> bool:
+        """True once the one-and-only response is recorded (§18.3)."""
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> QueryResponse:
+        """Block until the response is recorded and return it — the same
+        object on every call, across client retries and primary failovers
+        (§18.3 idempotency).  Raises ``TimeoutError`` on a real expiry."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.request_id!r} not completed in {timeout}s")
+        return self._response
+
+    def _record(self, response: QueryResponse) -> None:
+        self._response = response
+        self._event.set()
+
+
+class ReplicatedServiceDaemon:
+    """N daemon replicas over ONE snapshot+WAL lineage with deterministic
+    primary failover (DESIGN.md §18.3).
+
+    One member of ``daemons`` is the **primary** — the only replica that
+    admits and schedules work.  Liveness is lease-based and entirely
+    injectable-clock driven (no real sleeps): a killed primary's lease
+    expires ``lease_sec`` after its recorded death on the shared clock,
+    at which point the next live replica takes over and **re-admits** the
+    dead primary's unanswered requests exactly once each, under their
+    original client-visible request ids.  Because every replica serves
+    the same index lineage and the frontends are deterministic, a
+    re-admitted request's response is byte-identical to what the dead
+    primary would have returned — pinned by the §18.3 chaos tests — so
+    clients cannot observe which replica answered; duplicates (client
+    retries of an id) resolve to the already-recorded response without
+    recomputation.  Exactness: every response is the exact
+    single-frontend response or explicitly flagged (shed), never silently
+    wrong, and every acknowledged (admitted) request gets exactly one
+    response.
+
+    The §14 ``daemon.crash`` fault point fires once per :meth:`pump` with
+    ``shard=`` the primary's index; a scheduled ``kill`` crashes the
+    primary mid-flight.  Deterministic mode: deterministic underlying
+    daemons + a shared virtual clock, driven by :meth:`pump` /
+    :meth:`drain` (drain expires the lease by advancing the virtual
+    clock when work is stranded on a dead primary).  Threaded mode:
+    :meth:`start` runs the live daemons' threads plus a failover monitor.
+    """
+
+    def __init__(
+        self,
+        daemons: Sequence[ServiceDaemon],
+        *,
+        clock=None,
+        lease_sec: float = 0.05,
+        injector=None,
+        poll_interval_s: float = 0.005,
+    ):
+        self.daemons = list(daemons)
+        if not self.daemons:
+            raise ValueError("ReplicatedServiceDaemon needs at least one daemon")
+        self.clock = clock or self.daemons[0].clock
+        self.lease_sec = float(lease_sec)
+        self.injector = injector
+        self.poll_interval_s = float(poll_interval_s)
+        self._lock = threading.RLock()
+        self.alive = [True] * len(self.daemons)
+        self._primary = 0
+        self._death_at: float | None = None
+        self._registry: dict[str, RequestHandle] = {}
+        self._auto = 0
+        self._failovers = 0
+        self._readmitted = 0
+        self._dedup_hits = 0
+        self._monitor: threading.Thread | None = None
+        self._stopping = False
+
+    # -- clock/lease ---------------------------------------------------------
+
+    def _now(self) -> float:
+        # reading the lease must not advance a virtual clock (peek vs now)
+        if getattr(self.clock, "virtual", False):
+            return self.clock.peek()
+        return self.clock.now()
+
+    @property
+    def primary(self) -> int | None:
+        """Index of the current primary, or None when every replica is
+        dead (§18.3; reads do not advance the lease clock)."""
+        with self._lock:
+            return self._primary if self.alive[self._primary] else None
+
+    # -- admission (idempotent request ids) ----------------------------------
+
+    def submit(
+        self,
+        request: SearchRequest | str,
+        *,
+        top_k: int = 10,
+        deadline_sec: float | None = None,
+        request_id: str | None = None,
+    ) -> RequestHandle:
+        """Admit one idempotent request (§18.3) and return its
+        :class:`RequestHandle`.  A known ``request_id`` returns the
+        existing handle — the recorded response is served as-is
+        (byte-identical, no recomputation); a fresh id is assigned to the
+        current primary.  With every replica dead the request completes
+        immediately as an explicitly flagged shed (never an error, never
+        silently dropped)."""
+        req = (
+            request
+            if isinstance(request, SearchRequest)
+            else SearchRequest(query=str(request), top_k=top_k, deadline_sec=deadline_sec)
+        )
+        with self._lock:
+            if request_id is None:
+                request_id = f"auto-{self._auto}"
+                self._auto += 1
+            handle = self._registry.get(request_id)
+            if handle is not None:
+                self._dedup_hits += 1
+                return handle
+            self._maybe_failover()
+            handle = RequestHandle(request_id, req)
+            self._registry[request_id] = handle
+            self._assign(handle)
+        return handle
+
+    def _assign(self, handle: RequestHandle) -> None:
+        if self.alive[self._primary]:
+            handle.ticket = self.daemons[self._primary].submit(handle.request)
+            return
+        if any(self.alive):
+            # arrived inside the dead primary's lease window: park it —
+            # failover admits it to the successor (never shed while a
+            # live replica remains)
+            return
+        handle._record(self._shed_response(handle.request))
+
+    def _shed_response(self, req: SearchRequest) -> QueryResponse:
+        stats = QueryStats()
+        stats.shed = 1
+        stats.partial = True  # no live primary: flagged, never silently lost
+        stats.deadline_sec = 0.0 if req.deadline_sec is None else float(req.deadline_sec)
+        return QueryResponse(query=req.query, docs=[], stats=stats)
+
+    # -- failure / failover --------------------------------------------------
+
+    def crash_primary(self) -> int | None:
+        """Kill the current primary (§18.3): fault-point targets and the
+        ``kill_primary`` wire op land here.  Its queued and in-flight
+        requests stay unanswered until the lease expires and the successor
+        re-admits them (exactly once each).  Returns the killed index, or
+        None if everything is already dead."""
+        with self._lock:
+            if not self.alive[self._primary]:
+                return None
+            killed = self._primary
+            self.alive[killed] = False
+            self._death_at = self._now()
+            return killed
+
+    def _maybe_fire_crash(self) -> None:
+        if self.injector is None:
+            return
+        from .resilience import ShardCrash
+
+        try:
+            self.injector.fire("daemon.crash", shard=self._primary)
+        except ShardCrash:
+            self.crash_primary()
+
+    def _maybe_failover(self) -> None:
+        if self.alive[self._primary] or self._death_at is None:
+            return
+        if self._now() < self._death_at + self.lease_sec:
+            return  # the dead primary's lease has not expired yet
+        n = len(self.daemons)
+        successor = None
+        for k in range(1, n + 1):
+            i = (self._primary + k) % n
+            if self.alive[i]:
+                successor = i
+                break
+        if successor is None:
+            # nobody left: answer stranded requests as flagged sheds
+            for handle in self._registry.values():
+                if not handle.done():
+                    handle._record(self._shed_response(handle.request))
+            self._death_at = None
+            return
+        self._primary = successor
+        self._death_at = None
+        self._failovers += 1
+        if self._monitor is not None:
+            self.daemons[successor].start()
+        # exactly-once re-admission: every unanswered request of the dead
+        # primary re-enters the successor's queue under its ORIGINAL id;
+        # the superseded ticket is dropped, so even if the dead process
+        # somehow finished it, only one response is ever recorded
+        for handle in self._registry.values():
+            if handle.done():
+                continue
+            old_ticket = handle.ticket
+            if old_ticket is not None and old_ticket.done():
+                # completed before the crash reached it: accept the exact
+                # response instead of recomputing
+                self._record(handle, old_ticket)
+                continue
+            if old_ticket is None:
+                # parked during the lease window: this is its FIRST
+                # admission, not a re-admission
+                handle.ticket = self.daemons[successor].submit(handle.request)
+                continue
+            handle.readmissions += 1
+            self._readmitted += 1
+            handle.ticket = self.daemons[successor].submit(handle.request)
+
+    def _record(self, handle: RequestHandle, ticket: Ticket) -> None:
+        if handle.ticket is ticket and not handle.done():
+            handle._record(ticket._response)
+
+    def _propagate(self) -> None:
+        for handle in self._registry.values():
+            t = handle.ticket
+            if t is not None and t.done() and not handle.done():
+                self._record(handle, t)
+
+    # -- deterministic drivers ----------------------------------------------
+
+    def pump(self) -> bool:
+        """One deterministic replicated-scheduler step (§18.3): fire the
+        ``daemon.crash`` fault point, run lease-based failover if due,
+        pump the live primary, and record completed responses.  Returns
+        True when any underlying work was done."""
+        with self._lock:
+            self._maybe_fire_crash()
+            self._maybe_failover()
+            p = self._primary if self.alive[self._primary] else None
+        worked = self.daemons[p].pump() if p is not None else False
+        with self._lock:
+            self._propagate()
+        return worked
+
+    def drain(self) -> None:
+        """Run :meth:`pump` until every registered request has its one
+        response (§18.3).  When work is stranded on a dead primary whose
+        lease has not expired, a virtual clock is advanced by
+        ``lease_sec`` (the deterministic analogue of waiting the lease
+        out); real clocks just keep polling."""
+        import time as _time
+
+        while True:
+            with self._lock:
+                pending = [h for h in self._registry.values() if not h.done()]
+            if not pending:
+                return
+            worked = self.pump()
+            if worked:
+                continue
+            with self._lock:
+                stranded = (not self.alive[self._primary]) and self._death_at is not None
+            if stranded and getattr(self.clock, "virtual", False):
+                self.clock.advance(self.lease_sec)
+            elif not getattr(self.clock, "virtual", False):
+                _time.sleep(self.poll_interval_s)
+
+    # -- threaded (real-time) mode -------------------------------------------
+
+    def start(self) -> "ReplicatedServiceDaemon":
+        """Threaded mode (§18.3): start the primary's daemon thread plus a
+        failover monitor that watches the lease and re-admits after a
+        kill; successors start on takeover.  Idempotent; returns self."""
+        with self._lock:
+            if self._monitor is not None:
+                return self
+            self._stopping = False
+            self.daemons[self._primary].start()
+            self._monitor = threading.Thread(
+                target=self._run_monitor, name="daemon-failover-monitor", daemon=True
+            )
+            self._monitor.start()
+        return self
+
+    def _run_monitor(self) -> None:
+        import time as _time
+
+        while not self._stopping:
+            with self._lock:
+                self._maybe_failover()
+                self._propagate()
+            _time.sleep(self.poll_interval_s)
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the monitor and every live daemon (§18.3); dead replicas
+        are left alone (their queues were re-admitted at failover)."""
+        with self._lock:
+            self._stopping = True
+            monitor = self._monitor
+            self._monitor = None
+        if monitor is not None:
+            monitor.join(timeout=10.0)
+        for i, daemon in enumerate(self.daemons):
+            if self.alive[i]:
+                daemon.stop(drain=drain)
+        with self._lock:
+            self._propagate()
+
+    # -- accounting ----------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Replication counters for the chaos harness and wire clients
+        (§18.3): primary index, per-replica liveness, failover count,
+        exactly-once re-admissions, idempotent dedup hits, and the live
+        primary's scheduler metrics."""
+        with self._lock:
+            p = self._primary if self.alive[self._primary] else None
+            return {
+                "replicas": len(self.daemons),
+                "primary": p,
+                "alive": list(self.alive),
+                "failovers": self._failovers,
+                "readmitted": self._readmitted,
+                "dedup_hits": self._dedup_hits,
+                "requests": len(self._registry),
+                "completed": sum(1 for h in self._registry.values() if h.done()),
+                "primary_metrics": None if p is None else self.daemons[p].metrics(),
+            }
+
+
 # ---- wire format (JSON lines over TCP) ------------------------------------
 
 
@@ -530,23 +897,39 @@ class _JsonLineHandler(socketserver.StreamRequestHandler):
             self.wfile.flush()
 
     @staticmethod
-    def _dispatch(daemon: ServiceDaemon, msg: dict) -> dict:
+    def _dispatch(daemon: "ServiceDaemon | ReplicatedServiceDaemon", msg: dict) -> dict:
         op = msg.get("op", "search")
         if op == "metrics":
             return {"metrics": daemon.metrics()}
         if op == "ping":
             return {"pong": True}
+        if op == "kill_primary":
+            # §18.3 failover walkthrough: only a replicated daemon has a
+            # primary to kill
+            if not isinstance(daemon, ReplicatedServiceDaemon):
+                return {"error": "kill_primary requires --replicas > 1"}
+            killed = daemon.crash_primary()
+            return {"killed": killed, "metrics": daemon.metrics()}
         if op != "search" or "query" not in msg:
             return {"error": f"unknown op {op!r}"}
         deadline_ms = msg.get("deadline_ms")
-        ticket = daemon.submit(
-            SearchRequest(
-                query=str(msg["query"]),
-                top_k=int(msg.get("top_k", 10)),
-                deadline_sec=None if deadline_ms is None else float(deadline_ms) / 1e3,
-            )
+        req = SearchRequest(
+            query=str(msg["query"]),
+            top_k=int(msg.get("top_k", 10)),
+            deadline_sec=None if deadline_ms is None else float(deadline_ms) / 1e3,
         )
-        resp = ticket.result(timeout=float(msg.get("timeout_s", 60.0)))
+        timeout_s = float(msg.get("timeout_s", 60.0))
+        if isinstance(daemon, ReplicatedServiceDaemon):
+            # idempotent §18.3 path: a repeated request_id returns the
+            # recorded response byte-identically, across failovers
+            handle = daemon.submit(req, request_id=msg.get("request_id"))
+            resp = handle.result(timeout=timeout_s)
+            out = response_to_wire(resp, handle.ticket)
+            out["request_id"] = handle.request_id
+            out["readmissions"] = handle.readmissions
+            return out
+        ticket = daemon.submit(req)
+        resp = ticket.result(timeout=timeout_s)
         return response_to_wire(resp, ticket)
 
 

@@ -27,7 +27,7 @@ from tests.strategies import make_corpus, make_queries
 from repro.core.keys import expand_subqueries, select_keys
 from repro.core.oracle import oracle_search
 from repro.core.postings import SearchResult
-from repro.index import DocumentStore, build_indexes
+from repro.index import DocumentStore, IncrementalIndexer, build_indexes
 from repro.index.incremental import index_sets_equal
 from repro.runtime.clock import ManualClock
 from repro.runtime.fault_tolerance import RestartPolicy
@@ -40,6 +40,11 @@ from repro.search.resilience import (
     FaultInjector,
     ResiliencePolicy,
     ShardCrash,
+)
+from repro.search.service import (
+    ReplicatedServiceDaemon,
+    ServiceDaemon,
+    response_to_wire,
 )
 
 # the three fault-schedule seeds the acceptance gate (and CI) replay
@@ -427,3 +432,321 @@ def test_legacy_dead_shards_routes_through_injector(tmp_path):
     clean = svc.search_batch([q], top_k=TOP_K)[0]
     assert clean.stats.shards_degraded == 0
     assert _response_frags(clean) == oracles[q]
+
+# ---------------------------------------------------------------------------
+# §18: WAL zero-data-loss recovery
+# ---------------------------------------------------------------------------
+
+# the CI chaos matrix replays the base seeds PLUS two wal-fault seeds
+WAL_SEEDS = CHAOS_SEEDS + (404, 505)
+
+
+def _build_wal_stack(tmp_path, chaos_seed=None, wal_faults=False, **policy_kw):
+    """A WAL-attached chaos stack: snapshot anchored by a §18.2 checkpoint,
+    then (optionally) a seeded schedule extended with ``wal.*`` /
+    ``daemon.crash`` events (``FaultInjector.from_seed(..., wal=True)``)."""
+    spec = make_corpus(CORPUS_SEED, max_docs=10)
+    store = DocumentStore.from_texts(spec.texts)
+    queries = make_queries(CORPUS_SEED, spec, n_queries=5)
+    svc = ShardedSearchService(
+        store,
+        n_shards=N_SHARDS,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+        algorithm="fused",
+        incremental=True,
+    )
+    svc.enable_wal(tmp_path / "snap")
+    svc.snapshot(tmp_path / "snap")  # clean anchored baseline snapshot
+    injector = (
+        FaultInjector.from_seed(chaos_seed, n_shards=N_SHARDS, wal=wal_faults)
+        if chaos_seed is not None
+        else None
+    )
+    svc.enable_resilience(policy=_fast_policy(**policy_kw), injector=injector)
+    # re-arm the WALs with the (possibly empty) injector so the §14
+    # ``wal.append`` / ``wal.torn_tail`` fault points fire per shard
+    svc.enable_wal(tmp_path / "snap")
+    return svc, store, queries
+
+
+def _shard_lineage(tmp_path, shard):
+    return tmp_path / "snap" / f"shard_{shard:02d}"
+
+
+def _restore_lineage(path, lemmatizer):
+    """Restore a shard lineage the way recovery does (§12.4 + §18.2): the
+    newest snapshot whose CRCs verify, plus its WAL replay tail.  A
+    snapshot physically corrupted by an injected bitflip fails loudly and
+    the next-older one is tried — never silently wrong bytes."""
+    from repro.index.store import StoreError
+
+    ids = sorted(
+        int(p.name.rsplit("_", 1)[1])
+        for p in path.glob("snap_*")
+        if p.is_dir() and p.name.rsplit("_", 1)[1].isdigit()
+    )
+    last_err = None
+    for sid in reversed(ids):
+        try:
+            return IncrementalIndexer.restore(
+                path, snapshot_id=sid, lemmatizer=lemmatizer
+            )
+        except StoreError as e:
+            last_err = e
+    raise last_err if last_err else FileNotFoundError(path)
+
+
+def _assert_durable_equals_live(svc, store, tmp_path, ctx=""):
+    """The §18.2 zero-data-loss invariant, checked per shard: a FRESH
+    restore of the durable lineage (snapshot + WAL-tail replay) is
+    ``index_sets_equal`` to the live in-memory shard — every acknowledged
+    op is durable, every unacknowledged one left no phantom."""
+    for i, live in enumerate(svc.indexers):
+        replica = _restore_lineage(_shard_lineage(tmp_path, i), store.lemmatizer)
+        eq, why = index_sets_equal(
+            live.index.to_index_set(), replica.index.to_index_set()
+        )
+        assert eq, f"{ctx}: shard {i} durable state != live: {why}"
+        assert live.documents.keys() == replica.documents.keys(), (ctx, i)
+        assert live.tombstones == replica.tombstones, (ctx, i)
+        assert sorted(live._buffer) == sorted(replica._buffer), (
+            ctx, i, "buffered (acked, uncommitted) adds diverged",
+        )
+
+
+def test_wal_recovery_restores_post_snapshot_commits(tmp_path):
+    """A killed shard comes back ``index_sets_equal`` to its durable
+    lineage INCLUDING commits after the last snapshot — the §18 tentpole
+    (the §12 snapshot alone would lose them)."""
+    svc, store, queries = _build_wal_stack(tmp_path)
+    oracles = {}  # corpus mutates below: state equality is the invariant
+    svc.add_documents(["zeta omega gamma delta epsilon"])
+    svc.commit()  # acked post-snapshot write on every shard (FL reduce)
+    victim = 1
+    pre_epoch = svc.indexers[victim]._restore_epoch
+    want_docs = set(svc.indexers[victim].documents)
+    svc.injector.schedule = (
+        FaultEvent("shard.search", "kill", shard=victim, at_call=0),
+    )
+    resp = svc.search_batch(queries[:1], top_k=TOP_K)[0]
+    assert resp.stats.recoveries == 1 and resp.stats.shards_degraded == 0
+    # the replay actually carried records (at least the logged commit)
+    assert svc.supervisor.wal_records_replayed > 0
+    assert svc.supervisor.metrics()["wal_records_replayed"] > 0
+    # recovered == durable lineage == pre-crash live state
+    assert set(svc.indexers[victim].documents) == want_docs
+    _assert_durable_equals_live(svc, store, tmp_path, "post-recovery")
+    # fresh §12.5 epoch on the recovered boot
+    assert svc.indexers[victim]._restore_epoch > pre_epoch
+    del oracles
+
+
+def test_crash_mid_commit_loses_nothing_acked(tmp_path):
+    """``wal.torn_tail`` tears a commit mid-frame: the op was never
+    acknowledged, the live shard never mutated, and recovery truncates the
+    torn bytes — durable state stays exactly the acknowledged prefix."""
+    svc, store, queries = _build_wal_stack(tmp_path)
+    svc.add_documents(["first acked doc alpha beta"])
+    svc.commit()  # fully acknowledged round
+    victim = 0
+    svc.injector.schedule = (
+        FaultEvent("wal.torn_tail", "kill", shard=victim, at_call=0),
+    )
+    svc.injector._arrivals.clear()  # at_call counts from the NEXT append
+    before = set(svc.indexers[victim].documents)
+    with pytest.raises(ShardCrash):
+        svc.commit()  # victim's WAL append tears mid-frame
+    assert set(svc.indexers[victim].documents) == before
+    # injected torn frame really hit the disk, reader truncates it
+    fired = [e for e in svc.injector.log if e["point"] == "wal.torn_tail"]
+    assert fired, "torn-tail event never fired"
+    _assert_durable_equals_live(svc, store, tmp_path, "after torn commit")
+
+
+def test_wal_append_crash_aborts_before_any_mutation(tmp_path):
+    """``wal.append`` crash: the op is lost BUT was never acknowledged and
+    never half-applied — no frame on disk, no live mutation, and the
+    durable lineage still matches the live state exactly."""
+    svc, store, queries = _build_wal_stack(tmp_path)
+    victim = 2
+    svc.injector.schedule = (
+        FaultEvent("wal.append", "crash", shard=victim, at_call=0, count=1),
+    )
+    n_records = len(svc.indexers[victim].wal.records())
+    with pytest.raises(ShardCrash):
+        svc.commit()
+    assert len(svc.indexers[victim].wal.records()) == n_records
+    _assert_durable_equals_live(svc, store, tmp_path, "after aborted append")
+    # the transient fault passed: the SAME op re-issued now succeeds and
+    # both live and durable state advance together
+    svc.commit()
+    assert len(svc.indexers[victim].wal.records()) == n_records + 1
+    _assert_durable_equals_live(svc, store, tmp_path, "after retried commit")
+
+
+@pytest.mark.parametrize("chaos_seed", WAL_SEEDS)
+def test_wal_chaos_differential_durable_equals_live(chaos_seed, tmp_path):
+    """Seeded §18 chaos differential (the CI matrix step): rounds of
+    mutations + serving under ``wal.append`` / ``wal.torn_tail`` / shard
+    kills.  Crashed mutations are unacknowledged no-ops; after every round
+    the durable lineage of EVERY shard replays to exactly the live state
+    (zero data loss, no phantoms), and recovered shards carry replayed
+    records."""
+    svc, store, queries = _build_wal_stack(
+        tmp_path, chaos_seed=chaos_seed, wal_faults=True
+    )
+    for rnd in range(4):
+        try:
+            svc.add_documents([f"round {rnd} mutation doc alpha beta gamma"])
+            svc.commit()
+        except ShardCrash:
+            pass  # aborted before the crashed shard mutated (unacked)
+        try:
+            svc.snapshot(tmp_path / "snap")  # checkpoint under fire
+        except ShardCrash:
+            pass
+        svc.search_batch(queries, top_k=TOP_K)  # drives shard faults+recovery
+        _assert_durable_equals_live(
+            svc, store, tmp_path, f"seed {chaos_seed} round {rnd}"
+        )
+    wal_fired = [e for e in svc.injector.log if e["point"].startswith("wal.")]
+    assert wal_fired, "wal=True schedule fired no wal faults"
+
+
+# ---------------------------------------------------------------------------
+# §18.3: replicated daemon failover (virtual clock, no real sleeps)
+# ---------------------------------------------------------------------------
+
+
+def _serving_stack():
+    spec = make_corpus(CORPUS_SEED, max_docs=8)
+    store = DocumentStore.from_texts(spec.texts)
+    svc = ShardedSearchService(
+        store,
+        n_shards=N_SHARDS,
+        sw_count=spec.sw_count,
+        fu_count=spec.fu_count,
+        max_distance=spec.max_distance,
+        algorithm="fused",
+        incremental=True,
+    )
+    queries = list(dict.fromkeys(make_queries(CORPUS_SEED, spec, n_queries=6)))
+    return svc, queries
+
+
+def _replicated(svc, n=2, clock=None, injector=None, lease_sec=0.05):
+    clock = clock or ManualClock()
+    return (
+        ReplicatedServiceDaemon(
+            [ServiceDaemon([ServingFrontend(svc)], clock=clock) for _ in range(n)],
+            clock=clock,
+            lease_sec=lease_sec,
+            injector=injector,
+        ),
+        clock,
+    )
+
+
+def _wire(resp):
+    return response_to_wire(resp)  # no ticket: content + flags only
+
+
+def test_replicated_failover_readmits_exactly_once_byte_identical():
+    """Kill the primary with every request in flight: after the lease the
+    successor re-admits each unanswered ticket EXACTLY once under its
+    original id, and responses are byte-identical to a fault-free serve."""
+    svc, queries = _serving_stack()
+    ref_frontend = ServingFrontend(svc)
+    want = [
+        _wire(r)
+        for r in ref_frontend.search_many(
+            [SearchRequest(q, top_k=TOP_K) for q in queries]
+        )
+    ]
+    rep, clock = _replicated(svc, n=2)
+    handles = [
+        rep.submit(SearchRequest(q, top_k=TOP_K), request_id=f"req-{i}")
+        for i, q in enumerate(queries)
+    ]
+    assert rep.crash_primary() == 0  # everything still queued on replica 0
+    rep.drain()  # advances the virtual clock past the lease, then re-admits
+    m = rep.metrics()
+    assert m["failovers"] == 1 and m["primary"] == 1
+    assert m["readmitted"] == len(handles)
+    assert [h.readmissions for h in handles] == [1] * len(handles)
+    assert [_wire(h.result()) for h in handles] == want
+    # exactly once: every id completed once, none shed, none duplicated
+    assert m["completed"] == len(handles) and m["requests"] == len(handles)
+
+
+def test_replicated_lease_window_parks_then_serves_exactly():
+    """Requests arriving while the dead primary still holds the lease are
+    parked (never shed while a live replica remains) and admitted to the
+    successor at failover as FIRST admissions, not re-admissions."""
+    svc, queries = _serving_stack()
+    ref = _wire(
+        ServingFrontend(svc).search_many([SearchRequest(queries[0], top_k=TOP_K)])[0]
+    )
+    rep, clock = _replicated(svc, n=2)
+    assert rep.crash_primary() == 0
+    h = rep.submit(SearchRequest(queries[0], top_k=TOP_K), request_id="parked")
+    assert not h.done(), "lease window must park, not shed"
+    rep.drain()
+    m = rep.metrics()
+    assert m["failovers"] == 1 and m["readmitted"] == 0
+    assert h.readmissions == 0
+    assert _wire(h.result()) == ref
+
+
+def test_replicated_dedup_returns_recorded_response_verbatim():
+    svc, queries = _serving_stack()
+    rep, clock = _replicated(svc, n=2)
+    h1 = rep.submit(SearchRequest(queries[0], top_k=TOP_K), request_id="dup")
+    rep.drain()
+    first = h1.result()
+    h2 = rep.submit(SearchRequest(queries[0], top_k=TOP_K), request_id="dup")
+    assert h2 is h1  # the registry IS the idempotency store
+    assert h2.result() is first  # recorded response, no recomputation
+    assert rep.metrics()["dedup_hits"] == 1
+
+
+def test_replicated_daemon_crash_fault_point_and_down_set_isolation():
+    """The ``daemon.crash`` §14 fault point kills the primary mid-pump via
+    the injector — and must NOT mark any index shard down (replica ids are
+    not shard ids)."""
+    svc, queries = _serving_stack()
+    ref_frontend = ServingFrontend(svc)
+    want = [
+        _wire(r)
+        for r in ref_frontend.search_many(
+            [SearchRequest(q, top_k=TOP_K) for q in queries[:3]]
+        )
+    ]
+    injector = FaultInjector(
+        schedule=[FaultEvent("daemon.crash", "kill", shard=0, at_call=0)]
+    )
+    rep, clock = _replicated(svc, n=3, injector=injector)
+    handles = [
+        rep.submit(SearchRequest(q, top_k=TOP_K), request_id=f"r{i}")
+        for i, q in enumerate(queries[:3])
+    ]
+    rep.drain()
+    assert [e["point"] for e in injector.log] == ["daemon.crash"]
+    assert not injector.down, "daemon replica kill leaked into the shard down-set"
+    m = rep.metrics()
+    assert m["failovers"] == 1 and m["alive"] == [False, True, True]
+    assert [_wire(h.result()) for h in handles] == want
+
+
+def test_replicated_all_dead_sheds_flagged_never_errors():
+    svc, queries = _serving_stack()
+    rep, clock = _replicated(svc, n=1)
+    assert rep.crash_primary() == 0
+    h = rep.submit(SearchRequest(queries[0], top_k=TOP_K), request_id="doomed")
+    assert h.done()  # nobody can ever serve it: flagged shed immediately
+    resp = h.result()
+    assert resp.stats.shed == 1 and resp.stats.partial
+    assert resp.docs == []
+    assert rep.metrics()["primary"] is None

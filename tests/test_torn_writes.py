@@ -1,0 +1,193 @@
+"""Torn-write properties for every durable artifact (DESIGN.md §12.4 + §18.1).
+
+A crash can cut ANY file at ANY byte boundary.  The contract, per artifact:
+
+* ``postings.bin`` / ``manifest.json`` (snapshot store): a truncated
+  snapshot NEVER restores silently wrong — the CRC/structure verify fails
+  loudly and recovery restores the next-older intact snapshot exactly
+  (restore-older-or-fail-loudly).
+* ``records.bin`` (§18 WAL): truncation at any boundary yields exactly a
+  *prefix* of the acknowledged records — the torn frame and everything
+  after it are cut, never reinterpreted — and restore+replay of that
+  prefix still succeeds end to end.
+
+Every byte boundary of small artifacts is swept exhaustively; the
+restore-level equivalence is additionally property-tested at drawn
+boundaries via the ``tests._hypothesis_compat`` shim (real ``hypothesis``
+when installed).
+"""
+
+from __future__ import annotations
+
+import bisect
+import functools
+import tempfile
+from pathlib import Path
+
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.index import IncrementalIndexer, index_sets_equal, synthesize_corpus
+from repro.index.store import StoreError
+from repro.index.wal import encode_frame, read_frames, replay
+
+SW, FU, D = 10, 20, 5
+
+
+@functools.lru_cache(maxsize=1)
+def _build_lineage():
+    """One two-snapshot WAL-attached lineage shared by the sweeps (each
+    test restores the exact original bytes after mutating).  Built once
+    per process in a mkdtemp (not a pytest fixture: the hypothesis-shim
+    ``@given`` cannot mix drawn arguments with fixtures)."""
+    root = Path(tempfile.mkdtemp(prefix="torn_writes_"))
+    store = synthesize_corpus(n_docs=4, doc_len=12, vocab_size=40, seed=3)
+    docs = list(store.documents)
+    ix = IncrementalIndexer(
+        sw_count=SW, fu_count=FU, max_distance=D, lemmatizer=store.lemmatizer
+    )
+    ix.enable_wal(root)
+    ix.add_prelemmatized(docs[:3])
+    ix.commit()
+    ix.snapshot(root)  # snap_0
+    ix.add_prelemmatized(docs[3:])
+    ix.commit()
+    ix.snapshot(root)  # snap_1
+    ix.delete_document(docs[0].doc_id)  # post-snapshot WAL tail
+    ix.commit()
+    return root, store, ix
+
+
+@pytest.fixture()
+def lineage():
+    return _build_lineage()
+
+
+def _state(ix):
+    return (
+        sorted(ix.documents),
+        sorted(ix.tombstones),
+        ix.index.to_index_set(),
+    )
+
+
+def _same_state(a, b):
+    if a[0] != b[0] or a[1] != b[1]:
+        return False, "doc/tombstone sets differ"
+    return index_sets_equal(a[2], b[2])
+
+
+def _sweep_restores_older_or_fails_loudly(lineage, victim_rel):
+    root, store, live = lineage
+    victim = root / victim_rel
+    original = victim.read_bytes()
+    want_latest = _state(live)
+    older = IncrementalIndexer.restore(root, snapshot_id=0, lemmatizer=store.lemmatizer)
+    want_older = _state(older)
+    try:
+        for cut in range(len(original)):
+            victim.write_bytes(original[:cut])
+            try:
+                got = IncrementalIndexer.restore(root, lemmatizer=store.lemmatizer)
+            except Exception:
+                pass  # loud failure: any raise is acceptable, silence is not
+            else:
+                # restored despite the damage: the state MUST still be the
+                # exact latest state (i.e. the damage was provably immaterial)
+                eq, why = _same_state(_state(got), want_latest)
+                assert eq, (
+                    f"{victim_rel} cut at {cut}: restore returned WRONG data "
+                    f"instead of failing loudly: {why}"
+                )
+            # the untouched older snapshot always restores exactly
+            if cut % 293 == 0:
+                fallback = IncrementalIndexer.restore(
+                    root, snapshot_id=0, lemmatizer=store.lemmatizer
+                )
+                eq, why = _same_state(_state(fallback), want_older)
+                assert eq, f"older-snapshot fallback diverged at cut {cut}: {why}"
+    finally:
+        victim.write_bytes(original)
+
+
+def test_postings_truncated_at_every_boundary(lineage):
+    root, _, _ = lineage
+    seg = sorted((root / "snap_1").glob("seg_*"))[-1]
+    _sweep_restores_older_or_fails_loudly(
+        lineage, seg.relative_to(root) / "postings.bin"
+    )
+
+
+def test_manifest_truncated_at_every_boundary(lineage):
+    _sweep_restores_older_or_fails_loudly(lineage, "snap_1/manifest.json")
+
+
+def test_segment_manifest_truncated_at_every_boundary(lineage):
+    root, _, _ = lineage
+    seg = sorted((root / "snap_1").glob("seg_*"))[-1]
+    _sweep_restores_older_or_fails_loudly(
+        lineage, seg.relative_to(root) / "manifest.json"
+    )
+
+
+# ---------------------------------------------------------------------------
+# the same sweep reused for §18.1 WAL frames
+# ---------------------------------------------------------------------------
+
+
+def test_wal_records_truncated_at_every_boundary_is_acked_prefix(tmp_path):
+    """Pure frame-level property, exhaustively at EVERY byte boundary: a
+    cut anywhere yields exactly the longest prefix of complete valid
+    frames — never a reinterpretation, never a resync past the tear."""
+    payloads = [
+        ("add", {"docs": [{"doc_id": i, "text": f"t{i}", "lemmas": []}]})
+        for i in range(3)
+    ] + [("commit", {"fl": None}), ("delete", {"doc_id": 1})]
+    frames = [encode_frame(i, t, p) for i, (t, p) in enumerate(payloads)]
+    blob = b"".join(frames)
+    ends = []
+    off = 0
+    for f in frames:
+        off += len(f)
+        ends.append(off)
+    path = tmp_path / "records.bin"
+    for cut in range(len(blob) + 1):
+        path.write_bytes(blob[:cut])
+        got = read_frames(path)
+        want = bisect.bisect_right(ends, cut)  # complete frames fully inside
+        assert [r.seq for r in got] == list(range(want)), f"cut at {cut}"
+        # physical truncation back to the last complete frame
+        assert path.read_bytes() == blob[: ends[want - 1] if want else 0]
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=0, max_value=10**9))
+def test_wal_tail_truncation_restores_acked_prefix_end_to_end(raw_cut):
+    """Restore-level property at drawn boundaries: cut the ACTIVE WAL tail
+    anywhere, and a fresh restore succeeds, replaying exactly the
+    surviving acked prefix — equal to snapshot + replay of those same
+    records (zero phantoms, zero silent loss beyond the torn frame)."""
+    root, store, _ = _build_lineage()
+    tail = sorted(root.glob("wal/wal_*"))[-1] / "records.bin"
+    original = tail.read_bytes()
+    full_records = read_frames(tail, truncate=False)
+    cut = raw_cut % (len(original) + 1)
+    try:
+        tail.write_bytes(original[:cut])
+        got = IncrementalIndexer.restore(root, lemmatizer=store.lemmatizer)
+        surviving = read_frames(tail, truncate=False)
+        # the survivors are exactly a prefix of the acked tail records
+        assert [r.seq for r in surviving] == [
+            r.seq for r in full_records[: len(surviving)]
+        ]
+        # expected: snapshot-only restore + replay of that same prefix
+        # (every tail record follows the sealing checkpoint anchor)
+        expect = IncrementalIndexer.restore(
+            root, lemmatizer=store.lemmatizer, replay_wal=False
+        )
+        replay(expect, surviving)
+        eq, why = _same_state(_state(got), _state(expect))
+        assert eq, f"cut at {cut}: {why}"
+    finally:
+        tail.write_bytes(original)

@@ -1,0 +1,355 @@
+"""Unit tests for the §18 write-ahead op log (frame format, torn tails,
+checkpoint/seal/prune retention, replay exactness, fault points).
+
+The contract under test (DESIGN.md §18.1-§18.2): every record whose
+``append`` returned survives any crash — torn tails and bitflips truncate
+to the acknowledged prefix, never corrupt it — and restoring the latest
+snapshot then replaying the WAL tail yields an indexer
+``index_sets_equal`` to the uncrashed live one, *including post-snapshot
+commits* (zero data loss).
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.index import (
+    IncrementalIndexer,
+    WriteAheadLog,
+    build_indexes,
+    index_sets_equal,
+    read_frames,
+    synthesize_corpus,
+)
+from repro.index.wal import (
+    encode_frame,
+    fl_from_payload,
+    fl_to_payload,
+    replay,
+)
+from repro.search.resilience import FaultEvent, FaultInjector, ShardCrash
+
+SW, FU, D = 40, 80, 5
+
+
+def _texts(n=18, seed=11):
+    store = synthesize_corpus(n_docs=n, doc_len=50, vocab_size=250, seed=seed)
+    return [d.text for d in store.documents], store.lemmatizer
+
+
+def _fresh(lem):
+    return IncrementalIndexer(sw_count=SW, fu_count=FU, max_distance=D, lemmatizer=lem)
+
+
+def _assert_same_index(a, b, ctx=""):
+    eq, why = index_sets_equal(a.index.to_index_set(), b.index.to_index_set())
+    assert eq, f"{ctx}: {why}"
+
+
+# ---------------------------------------------------------------------------
+# frame format (§18.1)
+# ---------------------------------------------------------------------------
+
+
+def test_frame_round_trip_byte_exact(tmp_path):
+    path = tmp_path / "records.bin"
+    payloads = [
+        ("add", {"docs": [{"doc_id": 0, "text": "a b", "lemmas": [["a", 0]]}]}),
+        ("delete", {"doc_id": 3}),
+        ("commit", {"fl": None}),
+        ("compact", {"memory_budget_bytes": None}),
+        ("checkpoint", {"snapshot_id": 0, "mutations": 4}),
+    ]
+    with open(path, "wb") as f:
+        for seq, (rtype, payload) in enumerate(payloads):
+            f.write(encode_frame(seq, rtype, payload))
+    records = read_frames(path)
+    assert [(r.seq, r.rtype, r.payload) for r in records] == [
+        (i, t, p) for i, (t, p) in enumerate(payloads)
+    ]
+
+
+@pytest.mark.parametrize(
+    "mutate,survivors",
+    [
+        (lambda data: data[:-1], 3),                 # torn tail: short payload
+        (lambda data: data[: len(data) // 2], 2),    # torn mid-frame
+        (lambda data: data[:-3] + bytes([data[-3] ^ 0x40]) + data[-2:], 3),  # bitflip
+    ],
+)
+def test_torn_or_flipped_tail_truncates_to_acknowledged_prefix(
+    tmp_path, mutate, survivors
+):
+    path = tmp_path / "records.bin"
+    frames = [encode_frame(i, "delete", {"doc_id": i}) for i in range(4)]
+    data = b"".join(frames)
+    path.write_bytes(mutate(data))
+    records = read_frames(path)
+    # the damaged frame and everything after it are cut; every earlier
+    # (acknowledged) one survives intact
+    assert [r.seq for r in records] == list(range(survivors))
+    # physical truncation: the file is now exactly the valid prefix and a
+    # fresh append extends a clean tail
+    assert path.read_bytes() == b"".join(frames[:survivors])
+    with open(path, "ab") as f:
+        f.write(encode_frame(survivors, "delete", {"doc_id": 99}))
+    assert [r.payload["doc_id"] for r in read_frames(path)] == (
+        list(range(survivors)) + [99]
+    )
+
+
+def test_mid_file_corruption_stops_scan_never_resyncs(tmp_path):
+    """A flipped byte in the MIDDLE record invalidates everything after it:
+    the reader must not resynchronize onto later frames (their ops may
+    depend on the lost one)."""
+    path = tmp_path / "records.bin"
+    frames = [encode_frame(i, "delete", {"doc_id": i}) for i in range(3)]
+    bad = bytearray(b"".join(frames))
+    bad[len(frames[0]) + 8] ^= 0x01  # inside frame 1
+    path.write_bytes(bytes(bad))
+    assert [r.seq for r in read_frames(path)] == [0]
+    assert path.read_bytes() == frames[0]
+
+
+def test_non_monotonic_sequence_rejected(tmp_path):
+    path = tmp_path / "records.bin"
+    path.write_bytes(
+        encode_frame(5, "delete", {"doc_id": 0}) + encode_frame(5, "delete", {"doc_id": 1})
+    )
+    assert [r.seq for r in read_frames(path)] == [5]
+
+
+def test_fl_payload_round_trip_exact():
+    texts, lem = _texts()
+    ix = _fresh(lem)
+    ix.add_documents(texts)
+    ix.commit()
+    fl = ix.fl
+    back = fl_from_payload(json.loads(json.dumps(fl_to_payload(fl))))
+    assert back.lemmas == fl.lemmas
+    assert back.fl_number == fl.fl_number
+    assert back.frequency == fl.frequency
+    assert (back.sw_count, back.fu_count) == (fl.sw_count, fl.fu_count)
+    assert fl_from_payload(None) is None and fl_to_payload(None) is None
+
+
+# ---------------------------------------------------------------------------
+# segments: checkpoint / seal / prune (§18.2)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_seals_segment_and_prune_keeps_tail(tmp_path):
+    wal = WriteAheadLog(tmp_path / "wal")
+    wal.append("delete", {"doc_id": 0})
+    wal.checkpoint(0, mutations=1)          # seals wal_0
+    wal.append("delete", {"doc_id": 1})
+    wal.checkpoint(1, mutations=2)          # seals wal_1
+    wal.append("delete", {"doc_id": 2})     # active tail wal_2 (unsealed)
+    segs = sorted(p.name for p in (tmp_path / "wal").glob("wal_*"))
+    assert segs == ["wal_0", "wal_1", "wal_2"]
+    assert not (tmp_path / "wal" / "wal_2" / "manifest.json").exists()
+    wal.prune(keep=1)
+    # only the newest SEALED segment is retained; the tail is untouchable
+    assert sorted(p.name for p in (tmp_path / "wal").glob("wal_*")) == [
+        "wal_1",
+        "wal_2",
+    ]
+    # sequence numbering continues monotonically across reopen
+    reopened = WriteAheadLog(tmp_path / "wal")
+    seq = reopened.append("delete", {"doc_id": 3})
+    assert seq == 5  # 0:delete 1:ckpt 2:delete 3:ckpt 4:delete -> next is 5
+    assert [r.seq for r in reopened.records()] == [2, 3, 4, 5]
+
+
+def test_tail_after_snapshot_anchors_and_unanchored_is_empty(tmp_path):
+    wal = WriteAheadLog(tmp_path / "wal")
+    wal.append("delete", {"doc_id": 0})
+    wal.checkpoint(0, mutations=1)
+    wal.append("delete", {"doc_id": 1})
+    wal.append("delete", {"doc_id": 2})
+    tail = wal.tail_after_snapshot(0)
+    assert [r.payload["doc_id"] for r in tail] == [1, 2]
+    # a snapshot the log never anchored -> nothing to replay (safe §12 RPO)
+    assert wal.tail_after_snapshot(7) == []
+
+
+# ---------------------------------------------------------------------------
+# replay exactness (§18.2): restore + tail == uncrashed live indexer
+# ---------------------------------------------------------------------------
+
+
+def test_restore_replays_post_snapshot_ops_exactly(tmp_path):
+    texts, lem = _texts()
+    live = _fresh(lem)
+    live.enable_wal(tmp_path)
+    ids = live.add_documents(texts[:12])
+    live.commit()
+    live.snapshot(tmp_path)
+    # post-snapshot mutations: the §12 snapshot alone would lose ALL of these
+    live.add_documents(texts[12:])
+    live.commit()
+    live.delete_document(ids[2])
+    live.commit(refresh_fl=True)
+    live.compact(memory_budget_bytes=None)
+
+    recovered = IncrementalIndexer.restore(tmp_path, lemmatizer=lem)
+    assert recovered.last_wal_replay["records"] > 0
+    _assert_same_index(recovered, live, "restore+replay vs live")
+    assert recovered.documents.keys() == live.documents.keys()
+    assert recovered.tombstones == live.tombstones
+    assert recovered.fl.lemmas == live.fl.lemmas
+    # the recovered indexer keeps logging: further ops land in the SAME log
+    recovered.delete_document(ids[5])
+    assert recovered.wal.records()[-1].payload == {"doc_id": ids[5]}
+
+
+def test_restore_without_replay_is_snapshot_only(tmp_path):
+    texts, lem = _texts()
+    live = _fresh(lem)
+    live.enable_wal(tmp_path)
+    live.add_documents(texts[:12])
+    live.commit()
+    live.snapshot(tmp_path)
+    live.add_documents(texts[12:])
+    live.commit()
+    snap_only = IncrementalIndexer.restore(tmp_path, lemmatizer=lem, replay_wal=False)
+    assert snap_only.last_wal_replay["records"] == 0
+    assert len(snap_only.documents) == 12  # the §12 RPO: post-snapshot ops lost
+    replayed = IncrementalIndexer.restore(tmp_path, lemmatizer=lem)
+    assert len(replayed.documents) == len(texts)
+
+
+def test_replay_reproduces_full_build_equivalence(tmp_path):
+    """The §12.3 equivalence extended through the WAL: replayed state still
+    matches a from-scratch ``build_indexes`` over the surviving corpus."""
+    texts, lem = _texts()
+    live = _fresh(lem)
+    live.enable_wal(tmp_path)
+    live.add_documents(texts[:10])
+    live.commit()
+    live.snapshot(tmp_path)
+    live.add_documents(texts[10:])
+    live.commit(refresh_fl=True)
+    recovered = IncrementalIndexer.restore(tmp_path, lemmatizer=lem)
+    eq, why = index_sets_equal(
+        recovered.index.to_index_set(), recovered.rebuild_index_set()
+    )
+    assert eq, f"replayed state vs full rebuild: {why}"
+
+
+def test_torn_wal_tail_recovers_acknowledged_prefix(tmp_path):
+    """Crash mid-append (real torn bytes on disk): recovery replays exactly
+    the acknowledged ops and the damaged tail is cut, not interpreted."""
+    texts, lem = _texts()
+    live = _fresh(lem)
+    wal = live.enable_wal(tmp_path)
+    live.add_documents(texts[:12])
+    live.commit()
+    live.snapshot(tmp_path)
+    ids = live.add_documents(texts[12:15])
+    live.commit()
+    # tear the tail: append garbage half-frame bytes as a crash would leave
+    tail_file = wal._segment / "records.bin"
+    good = tail_file.read_bytes()
+    tail_file.write_bytes(good + encode_frame(999, "delete", {"doc_id": 1})[:9])
+    recovered = IncrementalIndexer.restore(tmp_path, lemmatizer=lem)
+    _assert_same_index(recovered, live, "torn tail")
+    assert tail_file.read_bytes() == good
+    assert set(ids) <= recovered.documents.keys()
+
+
+def test_replay_is_suppressed_from_relogging(tmp_path):
+    texts, lem = _texts(n=8)
+    live = _fresh(lem)
+    wal = live.enable_wal(tmp_path)
+    live.add_documents(texts)
+    live.commit()
+    live.snapshot(tmp_path)
+    live.add_documents(["extra doc one two"])
+    live.commit()
+    n_records = len(wal.records())
+    recovered = IncrementalIndexer.restore(tmp_path, lemmatizer=lem)
+    # replay applied records but logged nothing new
+    assert recovered.last_wal_replay["records"] == 2
+    assert len(recovered.wal.records()) == n_records
+
+
+def test_replay_helper_counts_only_mutations(tmp_path):
+    texts, lem = _texts(n=8)
+    live = _fresh(lem)
+    wal = live.enable_wal(tmp_path)
+    live.add_documents(texts)
+    live.commit()
+    records = wal.records()
+    fresh = _fresh(lem)
+    applied = replay(fresh, records)
+    assert applied == 2  # add + commit; no checkpoint anchors in this log
+    _assert_same_index(fresh, live, "replay onto empty")
+
+
+# ---------------------------------------------------------------------------
+# §14 fault points: wal.append / wal.torn_tail
+# ---------------------------------------------------------------------------
+
+
+def test_wal_append_fault_loses_op_without_acknowledging(tmp_path):
+    texts, lem = _texts(n=8)
+    live = _fresh(lem)
+    live.enable_wal(
+        tmp_path,
+        injector=FaultInjector(
+            schedule=[FaultEvent("wal.append", "kill", shard=0, at_call=2)]
+        ),
+        shard=0,
+    )
+    live.add_documents(texts)
+    live.commit()
+    with pytest.raises(ShardCrash):
+        live.delete_document(min(live.documents))
+    # the aborted delete wrote NOTHING: no frame, no indexer mutation
+    assert [r.rtype for r in live.wal.records()] == ["add", "commit"]
+    assert min(live.documents) in live.documents
+
+
+def test_wal_torn_tail_fault_leaves_truncatable_partial_frame(tmp_path):
+    texts, lem = _texts(n=8)
+    live = _fresh(lem)
+    wal = live.enable_wal(
+        tmp_path,
+        injector=FaultInjector(
+            schedule=[FaultEvent("wal.torn_tail", "kill", shard=0, at_call=2)]
+        ),
+        shard=0,
+    )
+    live.add_documents(texts)
+    live.commit()
+    tail_file = wal._segment / "records.bin"
+    clean = tail_file.read_bytes()
+    with pytest.raises(ShardCrash):
+        live.delete_document(min(live.documents))
+    assert len(tail_file.read_bytes()) > len(clean)  # real partial bytes
+    # a fresh reader truncates the torn frame and sees only acked records
+    assert [r.rtype for r in read_frames(tail_file)] == ["add", "commit"]
+    assert tail_file.read_bytes() == clean
+
+
+def test_bulk_build_anchors_wal_for_post_build_replay(tmp_path):
+    store = synthesize_corpus(n_docs=10, doc_len=50, vocab_size=250, seed=11)
+    live, _stats = IncrementalIndexer.bulk_build(
+        documents=list(store.documents),
+        out_dir=tmp_path,
+        sw_count=SW,
+        fu_count=FU,
+        max_distance=D,
+        lemmatizer=store.lemmatizer,
+        wal=True,
+    )
+    assert live.wal is not None
+    assert live.wal.records()[0].rtype == "bulk_build"
+    live.add_documents(["post build doc alpha beta"])
+    live.commit()
+    recovered = IncrementalIndexer.restore(tmp_path, lemmatizer=store.lemmatizer)
+    assert recovered.last_wal_replay["records"] == 2
+    _assert_same_index(recovered, live, "bulk_build + replay")

@@ -1,11 +1,13 @@
 """CI persistence smoke: snapshot in one process, restore in another,
-re-serve the golden §10.1–10.2 queries (DESIGN.md §12).
+re-serve the golden §10.1–10.2 queries (DESIGN.md §12 + §18).
 
-Two subcommands, run as SEPARATE processes so the restore can share
+Four subcommands, run as SEPARATE processes so the restore can share
 nothing with the build (the restart the durable store exists for):
 
     PYTHONPATH=src python tools/persistence_smoke.py save <dir>
     PYTHONPATH=src python tools/persistence_smoke.py check <dir>
+    PYTHONPATH=src python tools/persistence_smoke.py crash <dir>
+    PYTHONPATH=src python tools/persistence_smoke.py replay <dir>
 
 ``save`` builds the paper's example corpus + a Zipf tail incrementally
 (commits across generations, one delete), snapshots a sharded service into
@@ -14,6 +16,16 @@ nothing with the build (the restart the durable store exists for):
 fresh process, re-serves the same queries through the frontend AND the raw
 engines, and exits non-zero unless the fragment sets are identical — the
 §12 exactness contract, enforced end to end across a process boundary.
+
+``crash`` builds the same service with a §18 WAL armed, snapshots it,
+applies ACKNOWLEDGED post-snapshot work (adds + commits + a delete), then
+crashes a final commit mid-WAL-append via the ``wal.torn_tail`` fault
+point — leaving a torn frame on disk exactly as a power cut would.  It
+records the acked fragment sets (the crashed op excluded) before dying.
+``replay`` restores in a fresh process: the WAL tail must replay every
+acked record, truncate the torn frame, and reproduce the acked fragment
+sets exactly — the §18.2 zero-data-loss contract across a real process
+boundary.
 """
 
 from __future__ import annotations
@@ -90,12 +102,93 @@ def check(directory: Path) -> int:
     return 1 if failures else 0
 
 
+def crash(directory: Path) -> int:
+    from repro.search.frontend import ServingFrontend
+    from repro.search.resilience import FaultEvent, FaultInjector
+
+    svc = _build_service()
+    svc.enable_wal(directory)
+    svc.snapshot(directory)
+    # ACKED post-snapshot tail: every one of these ops returns before the
+    # crash, so §18.2 says a fresh restore must reproduce all of them
+    svc.add_documents([
+        "to be who you are is not to be nobody",
+        "war and peace and who goes to war again",
+    ])
+    svc.commit()
+    svc.delete_document(5)
+    svc.commit()
+    frontend = ServingFrontend(svc)
+    expected = {
+        q: _fragments(frontend.search(q, top_k=64)) for q in GOLDEN_QUERIES
+    }
+    # the crashed op targets the shard that will route the next doc id;
+    # its WAL add-append dies mid-write, leaving a real torn frame
+    target = svc._next_doc_id % svc.n_shards
+    tail = sorted((directory / f"shard_{target:02d}" / "wal").glob("wal_*"))[-1]
+    acked_size = (tail / "records.bin").stat().st_size
+    svc.enable_wal(directory, injector=FaultInjector(schedule=[
+        FaultEvent("wal.torn_tail", "crash", shard=target, at_call=0),
+    ]))
+    try:
+        svc.add_documents(["this unacknowledged write is torn mid frame"])
+    except Exception as exc:
+        crashed = type(exc).__name__
+    else:
+        print("FAIL injected wal.torn_tail crash did not fire", file=sys.stderr)
+        return 1
+    torn_size = (tail / "records.bin").stat().st_size
+    if torn_size <= acked_size:
+        print("FAIL no partial frame reached the WAL tail", file=sys.stderr)
+        return 1
+    (directory / "expected_acked.json").write_text(json.dumps({
+        "fragments": expected,
+        "torn_tail": str((tail / "records.bin").relative_to(directory)),
+        "acked_size": acked_size,
+        "torn_size": torn_size,
+    }, indent=1))
+    print(f"crashed mid-commit via {crashed}: WAL tail torn at byte "
+          f"{torn_size} (last acked frame ends at {acked_size}); recorded "
+          f"{len(expected)} acked fragment sets")
+    return 0
+
+
+def replay(directory: Path) -> int:
+    from repro.search.distributed import ShardedSearchService
+    from repro.search.frontend import ServingFrontend
+
+    meta = json.loads((directory / "expected_acked.json").read_text())
+    svc = ShardedSearchService.restore(directory)
+    replayed = sum(ix.last_wal_replay["records"] for ix in svc.indexers)
+    frontend = ServingFrontend(svc)
+    failures = []
+    if replayed == 0:
+        failures.append("restore replayed no WAL records")
+    # replay must have truncated the torn frame back to the acked prefix
+    healed_size = (directory / meta["torn_tail"]).stat().st_size
+    if healed_size != meta["acked_size"]:
+        failures.append(
+            f"torn tail not truncated to acked prefix: {healed_size} != "
+            f"{meta['acked_size']} (crashed at {meta['torn_size']})"
+        )
+    for q, want in meta["fragments"].items():
+        if _fragments(frontend.search(q, top_k=64)) != [tuple(f) for f in want]:
+            failures.append(f"acked fragments diverged for {q!r}")
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    if not failures:
+        print(f"fresh process replayed {replayed} WAL record(s), truncated "
+              f"the torn tail, and reproduced {len(meta['fragments'])} acked "
+              f"fragment sets exactly (§18.2 zero data loss)")
+    return 1 if failures else 0
+
+
 def main() -> int:
-    if len(sys.argv) != 3 or sys.argv[1] not in ("save", "check"):
+    modes = {"save": save, "check": check, "crash": crash, "replay": replay}
+    if len(sys.argv) != 3 or sys.argv[1] not in modes:
         print(__doc__, file=sys.stderr)
         return 2
-    directory = Path(sys.argv[2])
-    return save(directory) if sys.argv[1] == "save" else check(directory)
+    return modes[sys.argv[1]](Path(sys.argv[2]))
 
 
 if __name__ == "__main__":
